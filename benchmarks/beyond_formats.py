@@ -1,0 +1,96 @@
+"""Beyond-paper: is the paper's E3M2 bias (10) the right choice?
+
+Single-byte feasibility pins most of MXSF's design: 2 local-exp bits give
+exactly 3 wide binades (switch at gap 3), and the escape code '00' hands 5
+bits to the sub-FP regime. The one remaining free knob is the E3M2 *bias*:
+eee in 1..7 covers offsets [1-bias, 7-bias].
+
+  * bias = 10 (paper): contiguous with E2M5 (offsets -9..-3), no coverage gap
+  * bias > 10: the window slides DOWN — deeper underflow protection, but a
+    coverage GAP opens at offsets (7-bias, -3]: values there clamp to the
+    E3M2 top with up to 2^(gap-...) relative error.
+
+This sweep measures that trade on real gradient tensors (underflow +
+rel-MSE, the Fig. 2b axes) and on heavy-tailed inference tensors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocking as B
+from repro.core.formats import floor_log2
+
+from .common import emit, train_reference_model
+
+
+def _exp2i(e):
+    e = jnp.clip(e, -126, 127).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type((e + 127) << 23, jnp.float32)
+
+
+def safe_qdq(x, block, bias: int):
+    """Single-byte-feasible parametric MXSF (switch fixed at gap 3)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.abs(xf).reshape(-1, block).max(axis=-1, keepdims=True)
+    se = jnp.where(amax > 0, floor_log2(amax), -127)
+    xa = xf.reshape(-1, block) * _exp2i(-se)
+    e = floor_log2(xa)
+    wide = e > -3                      # gap < 3 -> E2M5 regime
+    ceil3, floor3 = 7 - bias, 1 - bias  # E3M2 normal offsets [floor3, ceil3]
+    e3 = jnp.clip(e, floor3, ceil3)
+    step = jnp.where(wide, _exp2i(e - 5), _exp2i(e3 - 2))
+    q = jnp.round(xa / step) * step
+    top3 = 1.75 * (2.0 ** ceil3)       # coverage-gap values clamp here
+    q = jnp.where(wide, q, jnp.clip(q, -top3, top3))
+    q = jnp.clip(q, -(2.0 - 2.0 ** -5), 2.0 - 2.0 ** -5)
+    return (q * _exp2i(se)).reshape(x.shape)
+
+
+def run(steps: int = 100):
+    cfg, state, _, batch_at = train_reference_model(steps=steps)
+    from repro.core.policy import BF16
+    from repro.train import step as T
+
+    tcfg = T.TrainConfig(remat="none", xent_chunk=0)
+    grads = jax.grad(lambda p: T.loss_fn(p, batch_at(1), cfg, BF16, tcfg)[0])(
+        state["params"])
+    gs = [g.reshape(-1, 64) for g in jax.tree.leaves(grads)
+          if g.ndim >= 2 and g.size % 64 == 0]
+    g = jnp.concatenate(gs, axis=0)
+
+    rng = np.random.default_rng(0)
+    infer = jnp.asarray((rng.standard_normal((512, 64))
+                         * np.exp(rng.standard_normal((512, 64)) * 1.5)
+                         ).astype(np.float32))
+
+    # cross-check the parametric quantizer against the real MXSF at bias 10
+    ref = B.qdq(g, "mxsf", (64,))
+    par = safe_qdq(g, 64, 10)
+    agree = float(jnp.mean(jnp.isclose(ref, par, rtol=0, atol=0)))
+    emit("beyond_safe_bias10_matches_mxsf", 0.0, f"{agree:.4f}")
+
+    results = {}
+    for bias in (10, 11, 12, 13):
+        qg = safe_qdq(g, 64, bias)
+        nz = jnp.abs(g) > 0
+        under = float(jnp.sum((qg == 0) & nz) / jnp.maximum(nz.sum(), 1))
+        gerr = float(jnp.mean((qg - g) ** 2) / (jnp.mean(g ** 2) + 1e-30))
+        qi = safe_qdq(infer, 64, bias)
+        imse = float(jnp.mean((qi - infer) ** 2) / float(jnp.mean(infer ** 2)))
+        results[bias] = (under, gerr, imse)
+        emit(f"beyond_safe_bias{bias}", 0.0,
+             f"underflow={under:.4f};grad_relmse={gerr:.3e};"
+             f"infer_relmse={imse:.3e}")
+
+    u0, g0, i0 = results[10]
+    better = [b for b, (u, ge, im) in results.items()
+              if b != 10 and u <= u0 and ge <= g0 * 1.02 and im <= i0 * 1.02]
+    emit("beyond_safe_bias10_pareto", 0.0,
+         "paper-optimal" if not better else f"dominated_by_bias={better}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

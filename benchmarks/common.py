@@ -1,0 +1,86 @@
+"""Shared benchmark helpers: timing, CSV emit, small trained models."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_call(fn, *args, iters: int = 5, warmup: int = 1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+FORMATS_UNDER_TEST = ["mxint8", "mxfp8_e4m3", "mxfp8_e2m5", "mxsf"]
+FORMAT_LABEL = {"mxint8": "MXINT8", "mxfp8_e4m3": "MXFP8", "mxfp8_e2m5":
+                "BOOST", "mxsf": "MXSF", "bf16": "BF16"}
+
+
+def train_reference_model(arch: str = "deit-tiny", steps: int = 150,
+                          lr: float = 1e-3, seed: int = 0, policy=None):
+    """FP32/BF16-train a small reference model on the synthetic task.
+
+    Returns (cfg, final_state, eval_fn(params, policy) -> accuracy).
+    Used as the 'pretrained model' for the direct-cast experiments.
+    """
+    from repro.configs.base import get_config
+    from repro.core.policy import BF16
+    from repro.data.pipeline import vision_batch, lm_batch
+    from repro.optim.adamw import OptConfig
+    from repro.train import step as T
+
+    cfg = get_config(arch).reduced() if arch != "deit-tiny" else \
+        get_config(arch).replace(n_layers=4, d_model=64, n_heads=4, n_kv=4,
+                                 d_head=16, d_ff=128, frontend_tokens=16,
+                                 n_classes=16, name="deit-tiny")
+    policy = policy or BF16
+    ocfg = OptConfig(lr=lr, warmup_steps=20, total_steps=steps,
+                     weight_decay=0.0)
+    tcfg = T.TrainConfig(remat="none", xent_chunk=0)
+    state = T.init_state(jax.random.PRNGKey(seed), cfg, ocfg)
+    step_fn = jax.jit(T.make_train_step(cfg, policy, ocfg, tcfg))
+
+    def batch_at(i):
+        if cfg.family == "encoder":
+            x, y = vision_batch(seed, i, 64, cfg.frontend_tokens, cfg.d_model,
+                                cfg.n_classes)
+            return {"embeds": x, "label": y}
+        toks, labs = lm_batch(seed, i, 16, 64, cfg.vocab)
+        return {"tokens": toks, "labels": labs}
+
+    for i in range(steps):
+        state, metrics = step_fn(state, batch_at(i))
+
+    def eval_acc(params, pol, n_batches: int = 8):
+        from repro.models import model as M
+        correct = total = 0
+        loss_sum = 0.0
+        for i in range(1000, 1000 + n_batches):
+            b = batch_at(i)
+            if cfg.family == "encoder":
+                logits = M.forward(params, b, cfg, pol)
+                correct += float((jnp.argmax(logits, -1) == b["label"]).sum())
+                total += b["label"].size
+            else:
+                logits = M.forward(params, b, cfg, pol)
+                pred = jnp.argmax(logits, -1)
+                correct += float((pred == b["labels"]).sum())
+                total += b["labels"].size
+                from repro.train.step import _xent
+                loss_sum += float(_xent(logits, b["labels"], cfg.vocab))
+        return correct / total, loss_sum / n_batches
+
+    return cfg, state, eval_acc, batch_at

@@ -1,0 +1,37 @@
+"""Paper Table II: direct-cast inference accuracy per MX format.
+
+Train a small model in BF16 on the synthetic task, then evaluate with every
+tensor direct-cast (weights + activations quantized, 1x64 inference blocks,
+no calibration).  Claim under test: MXSF/BOOST/MXINT8 stay within ~1% of the
+BF16 baseline; MXFP8_E4M3 degrades the most.
+"""
+from __future__ import annotations
+
+from repro.core.policy import BF16, QuantPolicy
+
+from .common import FORMAT_LABEL, FORMATS_UNDER_TEST, emit, \
+    train_reference_model
+
+
+def run(steps: int = 200):
+    cfg, state, eval_acc, _ = train_reference_model(steps=steps)
+    params = state["params"]
+
+    base_acc, _ = eval_acc(params, BF16)
+    emit("table2_directcast_BF16", 0.0, f"{base_acc:.4f}")
+    accs = {"bf16": base_acc}
+    for fmt in FORMATS_UNDER_TEST:
+        pol = QuantPolicy(fwd_fmt=fmt, block_mode="1d", block_1d=64,
+                          quantize_bwd=False)
+        acc, _ = eval_acc(params, pol)
+        accs[fmt] = acc
+        emit(f"table2_directcast_{FORMAT_LABEL[fmt]}", 0.0, f"{acc:.4f}")
+
+    ok = (accs["mxsf"] >= accs["mxfp8_e4m3"] - 1e-6
+          and accs["mxsf"] >= base_acc - 0.02)
+    emit("table2_mxsf_within_baseline", 0.0, str(ok))
+    return accs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Direct-cast inference (paper Table II workflow): train BF16, cast to MX.
+
+    PYTHONPATH=src python examples/directcast_inference.py
+"""
+import sys
+
+sys.path.insert(0, ".")  # allow running from repo root
+
+from benchmarks.common import train_reference_model  # noqa: E402
+from repro.core.policy import BF16, QuantPolicy  # noqa: E402
+
+
+def main():
+    print("training a small reference model in BF16 ...")
+    cfg, state, eval_acc, _ = train_reference_model(steps=150)
+    base, _ = eval_acc(state["params"], BF16)
+    print(f"BF16 baseline accuracy      : {base:.4f}")
+    for fmt in ["mxint8", "mxfp8_e4m3", "mxfp8_e2m5", "mxsf"]:
+        pol = QuantPolicy(fwd_fmt=fmt, block_mode="1d", block_1d=64,
+                          quantize_bwd=False)
+        acc, _ = eval_acc(state["params"], pol)
+        print(f"direct-cast {fmt:12s} acc : {acc:.4f}  "
+              f"(drop {base - acc:+.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps in MXSF.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--small]
+
+Uses the h2o-danube family scaled to ~100M params (12L x 512d), the MXSF 2D
+training policy, remat, grad accumulation, checkpointing with auto-resume.
+``--small`` drops to the smoke-size config for a fast run.
+"""
+import argparse
+import sys
+
+from repro.configs.base import get_config, register
+from repro.launch import train as train_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--policy", default="mxsf")
+    args = ap.parse_args()
+
+    if args.small:
+        arch = "h2o-danube-1.8b-reduced"
+    else:
+        base = get_config("h2o-danube-1.8b")
+        register(base.replace(name="danube-100m", n_layers=12, d_model=512,
+                              n_heads=8, n_kv=4, d_head=64, d_ff=1408,
+                              vocab=32000, swa_window=256))
+        arch = "danube-100m"
+
+    train_cli.main([
+        "--arch", arch,
+        "--steps", str(args.steps),
+        "--batch", "8" if not args.small else "4",
+        "--seq", "256" if not args.small else "64",
+        "--policy", args.policy,
+        "--block-mode", "2d",
+        "--remat", "dots",
+        "--ckpt-dir", "/tmp/repro_train_lm",
+        "--ckpt-every", "100",
+        "--metrics-out", "/tmp/repro_train_lm_metrics.json",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Block structure for MX tensors: 1D row blocks and 2D tiles (paper SIV-B).
+
+A block shares one E8M0 exponent.  ``block`` is a tuple applied to the
+trailing dims of the tensor:
+
+  * ``(32,)`` / ``(64,)`` : 1D blocks along the last axis (inference layout)
+  * ``(8, 8)``            : 2D tiles over the last two axes (training layout,
+                            enables transpose reuse without re-quantization)
+
+Shapes that do not divide the block are zero-padded internally (zeros never
+raise a block max) and cropped on dequantize.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import formats as F
+
+
+def _exp2i(e):
+    """Exact 2^e via exponent-field bitcast (cheaper than ldexp's HLO)."""
+    e = jnp.clip(e, -126, 127).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type((e + 127) << 23, jnp.float32)
+
+__all__ = [
+    "QuantizedTensor",
+    "quantize",
+    "dequantize",
+    "qdq",
+    "transpose_qt",
+    "block_scaled_view",
+    "exponent_gaps",
+]
+
+SCALE_BIAS = 127  # E8M0 storage bias
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Packed MX tensor: uint8/int8 codes + E8M0 per-block shared exponents."""
+
+    codes: jax.Array       # same shape as (padded) original
+    scale_e8m0: jax.Array  # uint8, block-grid shape
+    fmt: str = dataclasses.field(metadata=dict(static=True))
+    block: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    shape: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    dtype: str = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def format(self) -> F.MXFormat:
+        return F.get_format(self.fmt)
+
+    def nbytes_packed(self) -> int:
+        """Storage cost of the packed representation (codes + scales)."""
+        n = math.prod(self.shape)
+        elem_bits = self.format.bits
+        blk = math.prod(self.block)
+        return n * elem_bits // 8 + _ceil_div(n, blk)
+
+
+def _pad_to_block(x: jax.Array, block: Tuple[int, ...]):
+    nb = len(block)
+    pads = [(0, 0)] * (x.ndim - nb)
+    padded = False
+    for i, b in enumerate(block):
+        dim = x.shape[x.ndim - nb + i]
+        extra = (-dim) % b
+        pads.append((0, extra))
+        padded |= extra > 0
+    if padded:
+        x = jnp.pad(x, pads)
+    return x
+
+
+def _to_blocks(x: jax.Array, block: Tuple[int, ...]) -> jax.Array:
+    """(..., D1, D2) with block (b1, b2) -> (..., D1/b1, D2/b2, b1, b2)."""
+    nb = len(block)
+    lead = x.shape[: x.ndim - nb]
+    split = []
+    for i, b in enumerate(block):
+        d = x.shape[x.ndim - nb + i]
+        split.extend([d // b, b])
+    x = x.reshape(*lead, *split)
+    # interleave: move block dims to the end
+    nlead = len(lead)
+    perm = list(range(nlead))
+    perm += [nlead + 2 * i for i in range(nb)]      # grid dims
+    perm += [nlead + 2 * i + 1 for i in range(nb)]  # block dims
+    return x.transpose(perm)
+
+
+def _from_blocks(xb: jax.Array, block: Tuple[int, ...]) -> jax.Array:
+    nb = len(block)
+    nlead = xb.ndim - 2 * nb
+    lead = xb.shape[:nlead]
+    perm = list(range(nlead))
+    for i in range(nb):
+        perm += [nlead + i, nlead + nb + i]
+    x = xb.transpose(perm)
+    dims = [xb.shape[nlead + i] * block[i] for i in range(nb)]
+    return x.reshape(*lead, *dims)
+
+
+def _block_amax(x: jax.Array, block: Tuple[int, ...]) -> jax.Array:
+    xb = _to_blocks(jnp.abs(x), block)
+    axes = tuple(range(xb.ndim - len(block), xb.ndim))
+    return xb.max(axis=axes)
+
+
+def _se_per_element(se_grid: jax.Array, block: Tuple[int, ...]) -> jax.Array:
+    """Block-grid (..., G1, G2) -> elementwise (..., G1*b1, G2*b2)."""
+    nb = len(block)
+    out = se_grid
+    for i, b in enumerate(block):
+        axis = out.ndim - nb + i
+        out = jnp.repeat(out, b, axis=axis)
+    return out
+
+
+def quantize(x: jax.Array, fmt_name: str, block: Tuple[int, ...]) -> QuantizedTensor:
+    """Bit-exact packed MX quantization."""
+    fmt = F.get_format(fmt_name)
+    if fmt.kind == "none":
+        raise ValueError("bf16 passthrough has no packed form")
+    orig_shape, orig_dtype = x.shape, x.dtype
+    x = _pad_to_block(x.astype(jnp.float32), block)
+    amax = _block_amax(x, block)
+    se = F.shared_exponent(amax)
+    se_el = _se_per_element(se, block)
+    xa = jnp.ldexp(x, -se_el)  # exact power-of-two scaling, 0 stays 0
+    codes = F.encode_rel(xa, fmt)
+    scale = jnp.clip(se + SCALE_BIAS, 0, 255).astype(jnp.uint8)
+    return QuantizedTensor(codes, scale, fmt_name, tuple(block),
+                           tuple(orig_shape), str(orig_dtype))
+
+
+def dequantize(qt: QuantizedTensor) -> jax.Array:
+    fmt = qt.format
+    se = qt.scale_e8m0.astype(jnp.int32) - SCALE_BIAS
+    se_el = _se_per_element(se, qt.block)
+    xa = F.decode_rel(qt.codes, fmt)
+    x = xa * _exp2i(se_el)  # decoded |xa| < 2, se in [-126, 128): exact
+    # crop padding
+    slices = tuple(slice(0, d) for d in qt.shape)
+    return x[slices].astype(qt.dtype)
+
+
+def qdq(x: jax.Array, fmt_name: str, block: Tuple[int, ...]) -> jax.Array:
+    """Fused quantize-dequantize (simulated quantization, value domain)."""
+    fmt = F.get_format(fmt_name)
+    if fmt.kind == "none":
+        return x
+    orig_shape, orig_dtype = x.shape, x.dtype
+    xf = _pad_to_block(x.astype(jnp.float32), block)
+    amax = _block_amax(xf, block)
+    se = F.shared_exponent(amax)
+    se_el = _se_per_element(se, block)
+    y = F.quantize_rel(jnp.ldexp(xf, -se_el), fmt) * _exp2i(se_el)
+    slices = tuple(slice(0, d) for d in orig_shape)
+    return y[slices].astype(orig_dtype)
+
+
+def transpose_qt(qt: QuantizedTensor) -> QuantizedTensor:
+    """Transpose-without-requantization (paper Fig. 4b).
+
+    Valid for square 2D tiles: the tile containing x[i, j] in X^T is the
+    transposed tile of X, so codes and scales just swap their two trailing
+    axes.  This is the hardware reuse the 2D tiling buys.
+    """
+    if len(qt.block) != 2 or qt.block[0] != qt.block[1]:
+        raise ValueError("transpose reuse requires square 2D tiles")
+    nd = qt.codes.ndim
+    perm = list(range(nd - 2)) + [nd - 1, nd - 2]
+    codes = qt.codes.transpose(perm)
+    scales = qt.scale_e8m0.transpose(perm)
+    shape = qt.shape[:-2] + (qt.shape[-1], qt.shape[-2])
+    return QuantizedTensor(codes, scales, qt.fmt, qt.block, tuple(shape), qt.dtype)
+
+
+def block_scaled_view(qt: QuantizedTensor):
+    """Return (values_rel, se_per_element) decoded without applying scales."""
+    se = qt.scale_e8m0.astype(jnp.int32) - SCALE_BIAS
+    return F.decode_rel(qt.codes, qt.format), _se_per_element(se, qt.block)
+
+
+def exponent_gaps(x: jax.Array, block: Tuple[int, ...]) -> jax.Array:
+    """Per-element exponent distance S_e - e_x within blocks (paper Fig. 1a).
+
+    Returns gaps for nonzero elements; zero elements get gap = 127.
+    """
+    xf = _pad_to_block(x.astype(jnp.float32), block)
+    amax = _block_amax(xf, block)
+    se = F.shared_exponent(amax)
+    se_el = _se_per_element(se, block)
+    ex = F.floor_log2(xf)
+    gap = se_el - ex
+    gap = jnp.where(xf != 0, gap, 127)
+    slices = tuple(slice(0, d) for d in x.shape)
+    return gap[slices]

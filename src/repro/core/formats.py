@@ -1,0 +1,342 @@
+"""MX element formats: bit-exact encode/decode + value-domain quantizers.
+
+Implements the paper's idealized minifloat semantics (Eq. 1-6):
+  * shared exponent  S_e = floor(log2(max|X|))  per block, stored E8M0
+  * MXINT8  (Eq. 1): 2's-complement int8, 6 fractional bits relative to S_e
+  * MXFP    (Eq. 2-4): generic e/m minifloat with subnormals; local exponent
+    offsets span [1 - E, 0] with E = 2^ebits - 1
+  * MXSF    (Alg. 1): dual-regime E2M5 (gap < 3) / sub-FP E3M2 bias-10
+    (gap >= 3) packed in one byte; the E2M5 subnormal space (local exp '00')
+    is repurposed as E3M2.
+
+All quantizers use round-to-nearest-even on the mantissa.  Everything here is
+pure jnp and shape-polymorphic; the block/shared-exponent handling lives in
+``blocking.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "MXFormat",
+    "FORMATS",
+    "get_format",
+    "floor_log2",
+    "shared_exponent",
+    "quantize_rel",
+    "encode_rel",
+    "decode_rel",
+    "max_quant_error_bound",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MXFormat:
+    """Descriptor of one MX *element* format.
+
+    ``kind``:
+      - 'int'  : MXINT (mbits total data bits incl. sign handling per Eq. 1)
+      - 'fp'   : generic minifloat (ebits/mbits + sign)
+      - 'safe' : the paper's MXSF dual-regime format
+      - 'none' : passthrough (bf16/fp32 baseline, no quantization)
+    """
+
+    name: str
+    kind: str
+    ebits: int = 0
+    mbits: int = 0
+
+    @property
+    def bits(self) -> int:
+        if self.kind == "int":
+            return self.mbits  # mbits counts total bits (sign included), m_i in Eq.1
+        if self.kind == "none":
+            return 16
+        return 1 + self.ebits + self.mbits
+
+    @property
+    def emax_offset(self) -> int:
+        """Largest representable exponent offset relative to S_e (always 0)."""
+        return 0
+
+    @property
+    def emin_offset(self) -> int:
+        """Smallest *normal* exponent offset relative to S_e."""
+        if self.kind == "fp":
+            return 2 - 2 ** self.ebits  # 1 - E,  E = 2^ebits - 1
+        if self.kind == "safe":
+            return -9  # E3M2 bias-10 regime bottom
+        return 0
+
+    @property
+    def max_rel(self) -> float:
+        """Largest representable magnitude relative to 2^S_e."""
+        if self.kind == "int":
+            return (2 ** (self.mbits - 1) - 1) / 2 ** (self.mbits - 2)
+        if self.kind in ("fp", "safe"):
+            mb = 5 if self.kind == "safe" else self.mbits
+            return 2.0 - 2.0 ** (-mb)
+        return float("inf")
+
+
+FORMATS = {
+    "bf16": MXFormat("bf16", "none"),
+    "mxint8": MXFormat("mxint8", "int", 0, 8),
+    "mxfp8_e4m3": MXFormat("mxfp8_e4m3", "fp", 4, 3),
+    "mxfp8_e5m2": MXFormat("mxfp8_e5m2", "fp", 5, 2),
+    "mxfp8_e3m4": MXFormat("mxfp8_e3m4", "fp", 3, 4),
+    # BOOST block minifloat == MXFP8_E2M5 (with standard subnormals)
+    "mxfp8_e2m5": MXFormat("mxfp8_e2m5", "fp", 2, 5),
+    "mxfp6_e2m3": MXFormat("mxfp6_e2m3", "fp", 2, 3),
+    "mxfp6_e3m2": MXFormat("mxfp6_e3m2", "fp", 3, 2),
+    "mxfp4_e2m1": MXFormat("mxfp4_e2m1", "fp", 2, 1),
+    # the paper's contribution
+    "mxsf": MXFormat("mxsf", "safe", 2, 5),
+}
+FORMATS["boost"] = FORMATS["mxfp8_e2m5"]
+
+
+def get_format(name: str) -> MXFormat:
+    try:
+        return FORMATS[name]
+    except KeyError:
+        raise ValueError(f"unknown MX format {name!r}; have {sorted(FORMATS)}")
+
+
+# ---------------------------------------------------------------------------
+# exponent helpers
+# ---------------------------------------------------------------------------
+
+def floor_log2(x: jax.Array) -> jax.Array:
+    """Exact floor(log2(|x|)) for finite nonzero x; 0 where x == 0."""
+    x = jnp.abs(x.astype(jnp.float32))
+    _, e = jnp.frexp(x)  # x = m * 2^e with m in [0.5, 1)
+    return jnp.where(x > 0, e - 1, 0).astype(jnp.int32)
+
+
+def shared_exponent(amax: jax.Array) -> jax.Array:
+    """S_e = floor(log2(amax)); 0-max blocks get the minimum exponent."""
+    return jnp.where(amax > 0, floor_log2(amax), -127).astype(jnp.int32)
+
+
+def _exp2(e: jax.Array) -> jax.Array:
+    return jnp.ldexp(jnp.float32(1.0), e.astype(jnp.int32))
+
+
+def _rne(x: jax.Array) -> jax.Array:
+    return jnp.round(x)  # numpy/jax round == round-half-to-even
+
+
+# ---------------------------------------------------------------------------
+# value-domain quantizers (relative: operate on xa = x * 2^-S_e, |xa| < 2)
+# ---------------------------------------------------------------------------
+
+def _quantize_int_rel(xa: jax.Array, mbits: int) -> jax.Array:
+    frac = mbits - 2  # Eq. (1): m_i - 2 fractional bits
+    q = _rne(xa * (2.0 ** frac))
+    q = jnp.clip(q, -(2.0 ** (mbits - 1)), 2.0 ** (mbits - 1) - 1)
+    return q * (2.0 ** -frac)
+
+
+def _quantize_fp_rel(xa: jax.Array, ebits: int, mbits: int) -> jax.Array:
+    emin = 2 - 2 ** ebits  # 1 - E
+    e = jnp.clip(floor_log2(xa), emin, 0)
+    step = _exp2(e - mbits)
+    q = _rne(xa / step) * step
+    lim = jnp.float32(2.0 - 2.0 ** (-mbits))
+    return jnp.clip(q, -lim, lim)
+
+
+def _quantize_safe_rel(xa: jax.Array) -> jax.Array:
+    """MXSF (Alg. 1): regime chosen by pre-rounding gap = -floor_log2(xa)."""
+    e = floor_log2(xa)
+    wide = e >= -2  # gap < 3  -> E2M5 (5 mantissa bits)
+    # E2M5 regime: step 2^(e-5); E3M2 regime: step 2^(max(e,-9)-2)
+    step = jnp.where(wide, _exp2(e - 5), _exp2(jnp.maximum(e, -9) - 2))
+    q = _rne(xa / step) * step
+    lim = jnp.float32(2.0 - 2.0 ** -5)
+    return jnp.clip(q, -lim, lim)
+
+
+def quantize_rel(xa: jax.Array, fmt: MXFormat) -> jax.Array:
+    """Quantize values already scaled relative to the shared exponent."""
+    xa = xa.astype(jnp.float32)
+    if fmt.kind == "none":
+        return xa
+    if fmt.kind == "int":
+        return _quantize_int_rel(xa, fmt.mbits)
+    if fmt.kind == "fp":
+        return _quantize_fp_rel(xa, fmt.ebits, fmt.mbits)
+    if fmt.kind == "safe":
+        return _quantize_safe_rel(xa)
+    raise ValueError(fmt.kind)
+
+
+# ---------------------------------------------------------------------------
+# bit-exact codecs (relative domain) -> uint8 codes
+# ---------------------------------------------------------------------------
+
+def _encode_safe_rel(xa: jax.Array) -> jax.Array:
+    """Pack xa in (-2, 2) into the MXSF byte [s | ee | mmmmm]."""
+    xa = xa.astype(jnp.float32)
+    s = (xa < 0) | ((xa == 0) & jnp.signbit(xa))
+    a = jnp.abs(xa)
+    e = floor_log2(a)
+
+    # ---- E2M5 regime (gap < 3, i.e. e >= -2) --------------------------------
+    e25 = jnp.clip(e, -2, 0)
+    m25 = _rne(a * _exp2(5 - e25))  # target 1.mmmmm * 32 in [32, 64)
+    # mantissa overflow rounds up a binade
+    ovf = m25 >= 64
+    e25 = jnp.where(ovf, e25 + 1, e25)
+    m25 = jnp.where(ovf, 32, m25)
+    # top-of-format clamp (e25 would exceed 0)
+    top = e25 > 0
+    e25 = jnp.where(top, 0, e25)
+    m25 = jnp.where(top, 63, m25)
+    code25 = ((e25 + 3) << 5) | (m25.astype(jnp.int32) - 32)
+
+    # ---- E3M2 regime (gap >= 3, e <= -3) ------------------------------------
+    e32 = jnp.clip(e, -9, -3)
+    sub = a < 2.0 ** -9
+    step = jnp.where(sub, jnp.float32(2.0 ** -11), _exp2(e32 - 2))
+    q = _rne(a / step)  # normal: [4, 8]; subnormal: [0, 4]
+    # subnormal rounding up to 4 becomes the smallest normal (eee=1, m=0)
+    q_norm = jnp.where(sub & (q >= 4), 4, q)
+    e32 = jnp.where(sub & (q >= 4), -9, e32)
+    sub = sub & (q < 4)
+    # normal mantissa overflow: bump exponent
+    novf = (~sub) & (q_norm >= 8)
+    e32 = jnp.where(novf, e32 + 1, e32)
+    q_norm = jnp.where(novf, 4, q_norm)
+    # crossing into the E2M5 regime (value == 2^-2) -> code s|01|00000
+    cross = e32 > -3
+    eee = jnp.where(sub, 0, e32 + 10)
+    m2 = jnp.where(sub, q_norm, q_norm - 4).astype(jnp.int32)
+    code32 = (eee.astype(jnp.int32) << 2) | m2
+    code32 = jnp.where(cross, (1 << 5) | 0, code32)
+
+    wide = e >= -2
+    code = jnp.where(a == 0, 0, jnp.where(wide, code25, code32))
+    return (code.astype(jnp.uint8) | (s.astype(jnp.uint8) << 7)).astype(jnp.uint8)
+
+
+def _decode_safe_rel(code: jax.Array) -> jax.Array:
+    code = code.astype(jnp.int32)
+    s = (code >> 7) & 1
+    ee = (code >> 5) & 3
+    m5 = code & 31
+    eee = (m5 >> 2) & 7
+    m2 = m5 & 3
+    v25 = (1.0 + m5.astype(jnp.float32) / 32.0) * _exp2(ee - 3)
+    v32n = (1.0 + m2.astype(jnp.float32) / 4.0) * _exp2(eee - 10)
+    v32s = (m2.astype(jnp.float32) / 4.0) * jnp.float32(2.0 ** -9)
+    mag = jnp.where(ee > 0, v25, jnp.where(eee > 0, v32n, v32s))
+    return jnp.where(s == 1, -mag, mag)
+
+
+def _encode_fp_rel(xa: jax.Array, ebits: int, mbits: int) -> jax.Array:
+    """Generic minifloat byte [s | e(ebits) | m(mbits)] (idealized, no NaN)."""
+    xa = xa.astype(jnp.float32)
+    s = (xa < 0) | ((xa == 0) & jnp.signbit(xa))
+    a = jnp.abs(xa)
+    e = floor_log2(a)
+    emin = 2 - 2 ** ebits  # 1 - E
+    eq = jnp.clip(e, emin, 0)
+    sub = a < 2.0 ** emin
+    step = _exp2(eq - mbits)
+    q = _rne(a / step)
+    half = 2 ** mbits  # implicit-one scaled mantissa for normals
+    # subnormal -> normal promotion
+    promote = sub & (q >= half)
+    sub = sub & (q < half)
+    q = jnp.where(promote, half, q)
+    # normal mantissa overflow
+    ovf = (~sub) & (q >= 2 * half)
+    eq = jnp.where(ovf, eq + 1, eq)
+    q = jnp.where(ovf, half, q)
+    top = eq > 0
+    eq = jnp.where(top, 0, eq)
+    q = jnp.where(top, 2 * half - 1, q)
+    E = 2 ** ebits - 1
+    efield = jnp.where(sub, 0, eq + E)
+    mfield = jnp.where(sub, q, q - half).astype(jnp.int32)
+    code = (efield.astype(jnp.int32) << mbits) | mfield
+    code = jnp.where(a == 0, 0, code)
+    return (code.astype(jnp.uint8) | (s.astype(jnp.uint8) << (ebits + mbits))).astype(jnp.uint8)
+
+
+def _decode_fp_rel(code: jax.Array, ebits: int, mbits: int) -> jax.Array:
+    code = code.astype(jnp.int32)
+    s = (code >> (ebits + mbits)) & 1
+    efield = (code >> mbits) & (2 ** ebits - 1)
+    m = (code & (2 ** mbits - 1)).astype(jnp.float32)
+    E = 2 ** ebits - 1
+    vn = (1.0 + m / 2 ** mbits) * _exp2(efield - E)
+    vs = (m / 2 ** mbits) * jnp.float32(2.0 ** (2 - 2 ** ebits))
+    mag = jnp.where(efield > 0, vn, vs)
+    return jnp.where(s == 1, -mag, mag)
+
+
+def _encode_int_rel(xa: jax.Array, mbits: int) -> jax.Array:
+    frac = mbits - 2
+    q = _rne(xa.astype(jnp.float32) * (2.0 ** frac))
+    q = jnp.clip(q, -(2.0 ** (mbits - 1)), 2.0 ** (mbits - 1) - 1)
+    return q.astype(jnp.int8)
+
+
+def _decode_int_rel(code: jax.Array, mbits: int) -> jax.Array:
+    return code.astype(jnp.float32) * (2.0 ** -(mbits - 2))
+
+
+def encode_rel(xa: jax.Array, fmt: MXFormat) -> jax.Array:
+    if fmt.kind == "safe":
+        return _encode_safe_rel(xa)
+    if fmt.kind == "fp":
+        return _encode_fp_rel(xa, fmt.ebits, fmt.mbits)
+    if fmt.kind == "int":
+        return _encode_int_rel(xa, fmt.mbits)
+    raise ValueError(f"format {fmt.name} has no packed codec")
+
+
+def decode_rel(code: jax.Array, fmt: MXFormat) -> jax.Array:
+    if fmt.kind == "safe":
+        return _decode_safe_rel(code)
+    if fmt.kind == "fp":
+        return _decode_fp_rel(code, fmt.ebits, fmt.mbits)
+    if fmt.kind == "int":
+        return _decode_int_rel(code, fmt.mbits)
+    raise ValueError(f"format {fmt.name} has no packed codec")
+
+
+# ---------------------------------------------------------------------------
+# analytical error bounds (paper Eq. 5-6) -- used by benchmarks/fig1 analysis
+# ---------------------------------------------------------------------------
+
+def max_quant_error_bound(gap: jax.Array, fmt: MXFormat, s_e: jax.Array = 0):
+    """Paper Eq. (5-6): max quantization error vs exponent gap (S_e - e_x)."""
+    gap = jnp.asarray(gap, jnp.float32)
+    s_e = jnp.asarray(s_e, jnp.float32)
+    if fmt.kind == "int":
+        return jnp.broadcast_to(2.0 ** (s_e - (fmt.mbits - 2) - 1), gap.shape)
+    e_x = s_e - gap
+    if fmt.kind == "fp":
+        E = 2 ** fmt.ebits - 1
+        x_le = E - gap
+        # standard (continuous) subnormals sit one binade above Eq.(4)'s
+        # idealized grid: half-step doubles once x_le <= 0
+        sub = jnp.where(x_le <= 0, 2.0, 1.0)
+        return (2.0 ** (e_x - fmt.mbits - 1)
+                * 2.0 ** (-jnp.minimum(x_le, 0)) * sub)
+    if fmt.kind == "safe":
+        wide = gap < 3
+        err_wide = 2.0 ** (e_x - 5 - 1)
+        x_le3 = jnp.maximum(10.0 - gap, 1.0) - 10.0 + gap  # 0 while normal
+        err_narrow = 2.0 ** (e_x - 2 - 1) * 2.0 ** x_le3
+        return jnp.where(wide, err_wide, err_narrow)
+    return jnp.zeros_like(gap)

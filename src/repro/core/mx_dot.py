@@ -1,0 +1,225 @@
+"""Quantized matmul with custom VJP — the paper's training datapath.
+
+``mx_dot(x, w, policy)`` quantizes both operands to the policy's MX format
+before the matmul and (optionally) quantizes the incoming gradient in the
+backward pass.  Two block layouts (paper Fig. 4):
+
+  * 1D row blocks: forward quantizes along the contraction dim; the backward
+    pass must RE-quantize x, w, g along their transposed contraction dims
+    (6 quantization passes / layer / step).
+  * 2D TxT tiles: quantize once, reuse via ``transpose_qt`` in the backward
+    (3 passes) — the paper's tiling contribution.
+
+Residuals are stored *packed* (uint8 codes + E8M0 scales) when
+``policy.save_packed``, which is what gives the memory saving on real
+hardware; packed and value-domain residuals are bit-identical (tested).
+
+A trace-time counter (``quant_pass_count``) reproduces the Fig. 4
+quantization-pass accounting.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocking as B
+from .policy import QuantPolicy
+
+__all__ = ["mx_dot", "mx_einsum", "qdq_along", "count_quant_passes",
+           "quant_pass_count"]
+
+# ---------------------------------------------------------------------------
+# trace-time quantization-pass accounting (paper Fig. 4)
+# ---------------------------------------------------------------------------
+
+_COUNTER = {"n": 0, "active": False}
+
+
+@contextlib.contextmanager
+def count_quant_passes():
+    """Count quantize ops added to the traced graph inside this context."""
+    prev = dict(_COUNTER)
+    _COUNTER.update(n=0, active=True)
+    try:
+        yield _COUNTER
+    finally:
+        _COUNTER["active"] = prev["active"]
+
+
+def quant_pass_count() -> int:
+    return _COUNTER["n"]
+
+
+def _tick():
+    if _COUNTER["active"]:
+        _COUNTER["n"] += 1
+
+
+def _qdq(x, fmt, block):
+    _tick()
+    return B.qdq(x, fmt, block)
+
+
+def _quantize(x, fmt, block):
+    _tick()
+    return B.quantize(x, fmt, block)
+
+
+def qdq_along(x: jax.Array, fmt: str, policy: QuantPolicy, axis: int = -1):
+    """Quantize-dequantize with 1D blocks along ``axis`` (-1 or -2)."""
+    if not policy.enabled:
+        return x
+    blk = (policy.block_1d,) if axis in (-1, x.ndim - 1) else (policy.block_1d, 1)
+    return _qdq(x, fmt, blk)
+
+
+# ---------------------------------------------------------------------------
+# mx_dot: x (..., K) @ w (K, N)
+# ---------------------------------------------------------------------------
+
+def _flatten_lead(x):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mx_dot(policy: QuantPolicy, x: jax.Array, w: jax.Array) -> jax.Array:
+    y, _ = _mx_dot_fwd(policy, x, w)
+    return y
+
+
+def _mx_dot_fwd(policy: QuantPolicy, x, w):
+    xm, lead = _flatten_lead(x)
+    if policy.block_mode == "2d":
+        blk = (policy.tile, policy.tile)
+    else:
+        blk = None
+    if policy.save_packed:
+        if policy.block_mode == "2d":
+            qtx = _quantize(xm, policy.fwd_fmt, blk)
+            qtw = _quantize(w, policy.fwd_fmt, blk)
+        else:  # 1d: x blocks along K (last), w blocks along K (rows)
+            qtx = _quantize(xm, policy.fwd_fmt, (policy.block_1d,))
+            qtw = _quantize(w, policy.fwd_fmt, (policy.block_1d, 1))
+        xq = B.dequantize(qtx)
+        wq = B.dequantize(qtw)
+        res = (qtx, qtw)
+    else:
+        if policy.block_mode == "2d":
+            xq = _qdq(xm, policy.fwd_fmt, blk)
+            wq = _qdq(w, policy.fwd_fmt, blk)
+        else:
+            xq = _qdq(xm, policy.fwd_fmt, (policy.block_1d,))
+            wq = _qdq(w, policy.fwd_fmt, (policy.block_1d, 1))
+        res = (xq, wq)
+    y = jnp.matmul(xq, wq)
+    return y.reshape(*lead, w.shape[-1]), (res, lead)
+
+
+def _mx_dot_bwd(policy: QuantPolicy, carry, g):
+    res, lead = carry
+    gm = g.reshape(-1, g.shape[-1])  # (M, N)
+
+    if policy.save_packed:
+        qtx, qtw = res
+    else:
+        xq, wq = res
+
+    if policy.block_mode == "2d":
+        # quantize g once as TxT tiles; reuse x/w tiles transposed (Fig. 4b)
+        blk = (policy.tile, policy.tile)
+        if policy.quantize_bwd:
+            gq = _qdq(gm, policy.bwd_fmt, blk)
+        else:
+            gq = gm
+        if policy.save_packed:
+            wTq = B.dequantize(B.transpose_qt(qtw))   # (N, K), no requant
+            xTq = B.dequantize(B.transpose_qt(qtx))   # (K, M), no requant
+        else:
+            wTq, xTq = wq.T, xq.T
+        dx = jnp.matmul(gq, wTq)
+        dw = jnp.matmul(xTq, gq)
+    else:
+        # 1D: re-quantize along the new contraction dims (Fig. 4a)
+        if policy.save_packed:
+            xq = B.dequantize(qtx)
+            wq = B.dequantize(qtw)
+        b = policy.block_1d
+        if policy.quantize_bwd:
+            g_for_dx = _qdq(gm, policy.bwd_fmt, (b,))       # blocks along N
+            g_for_dw = _qdq(gm, policy.bwd_fmt, (b, 1))     # blocks along M
+        else:
+            g_for_dx = g_for_dw = gm
+        w_re = _qdq(wq, policy.fwd_fmt, (1, b))             # blocks along N
+        x_re = _qdq(xq, policy.fwd_fmt, (b, 1))             # blocks along M
+        dx = jnp.matmul(g_for_dx, w_re.T)
+        dw = jnp.matmul(x_re.T, g_for_dw)
+
+    dx = dx.reshape(*lead, dx.shape[-1]).astype(g.dtype)
+    return dx, dw.astype(g.dtype)
+
+
+_mx_dot.defvjp(_mx_dot_fwd, _mx_dot_bwd)
+
+
+def mx_dot(x: jax.Array, w: jax.Array, policy: QuantPolicy) -> jax.Array:
+    """Quantized ``x @ w`` (x: (..., K), w: (K, N)) per the MX policy."""
+    if not policy.enabled:
+        return jnp.matmul(x, w)
+    return _mx_dot(policy, x, w)
+
+
+# ---------------------------------------------------------------------------
+# mx_einsum: generic two-operand quantized einsum (attention matmuls)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _mx_einsum(subs, policy, axes, g_axes, quant_ops, a, b):
+    y, _ = _mx_einsum_fwd(subs, policy, axes, g_axes, quant_ops, a, b)
+    return y
+
+
+def _mx_einsum_fwd(subs, policy: QuantPolicy, axes, g_axes, quant_ops, a, b):
+    qa = qdq_along(a, policy.fwd_fmt, policy, axes[0]) if quant_ops[0] else a
+    qb = qdq_along(b, policy.fwd_fmt, policy, axes[1]) if quant_ops[1] else b
+    return jnp.einsum(subs, qa, qb), (qa, qb)
+
+
+def _mx_einsum_bwd(subs, policy: QuantPolicy, axes, g_axes, quant_ops, res, g):
+    qa, qb = res
+    f = lambda a_, b_: jnp.einsum(subs, a_, b_)
+    _, vjp = jax.vjp(f, qa, qb)
+    if policy.quantize_bwd:
+        # hardware re-quantizes g along each backward contraction dim
+        da = vjp(qdq_along(g, policy.bwd_fmt, policy, g_axes[0]))[0]
+        db = vjp(qdq_along(g, policy.bwd_fmt, policy, g_axes[1]))[1]
+    else:
+        da, db = vjp(g)
+    return da, db
+
+
+_mx_einsum.defvjp(_mx_einsum_fwd, _mx_einsum_bwd)
+
+
+def mx_einsum(subs: str, a: jax.Array, b: jax.Array, policy: QuantPolicy,
+              axes: Tuple[int, int] = (-1, -1),
+              g_axes: Tuple[int, int] = (-1, -2),
+              quant_ops: Tuple[bool, bool] = (True, True)) -> jax.Array:
+    """Two-operand einsum with MX-quantized operands (and gradients).
+
+    ``axes``  : contraction axis of each forward operand (-1 or -2), used to
+                orient the 1D quantization blocks.
+    ``g_axes``: contraction axis of the incoming gradient for (da, db).
+    ``quant_ops``: per-operand quantization; False marks an operand that is
+                ALREADY quantized (e.g. a dequantized MXSF KV cache read —
+                the accelerator feeds cache codes straight into the MAC).
+    """
+    if not policy.enabled or not policy.attn_matmuls:
+        return jnp.einsum(subs, a, b)
+    return _mx_einsum(subs, policy, tuple(axes), tuple(g_axes),
+                      tuple(quant_ops), a, b)

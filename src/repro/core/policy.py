@@ -1,0 +1,46 @@
+"""Quantization policy: which format/blocking applies where.
+
+One frozen, hashable dataclass threaded through the model.  ``block_mode``
+selects the paper's two layouts:
+
+  * ``'1d'``  : 1xB row blocks along the contraction dim (inference layout;
+                training in this mode pays the Fig.4a re-quantization cost)
+  * ``'2d'``  : TxT tiles quantized once and transposed for free (Fig.4b)
+  * ``'none'``: no quantization (bf16 baseline)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["QuantPolicy", "BF16", "MXSF_TRAIN", "MXSF_INFER"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    fwd_fmt: str = "mxsf"        # activations & weights, forward
+    bwd_fmt: str = "mxsf"        # incoming gradients, backward
+    block_mode: str = "2d"       # 'none' | '1d' | '2d'
+    block_1d: int = 64           # 1D row-block length (paper: 64 inference)
+    tile: int = 8                # 2D tile edge (paper: 8x8 training)
+    quantize_bwd: bool = True    # quantize gradients in backward
+    attn_matmuls: bool = True    # quantize QK^T and attn.V operands
+    save_packed: bool = True     # store uint8-packed residuals for bwd
+    kv_cache_fmt: str = ""       # e.g. 'mxsf': 8-bit packed KV cache (serving)
+
+    @property
+    def enabled(self) -> bool:
+        return self.block_mode != "none"
+
+    def fwd_block(self, for_matrix: bool = True):
+        if self.block_mode == "2d":
+            return (self.tile, self.tile)
+        return (self.block_1d,)
+
+    def replace(self, **kw) -> "QuantPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+BF16 = QuantPolicy(block_mode="none")
+MXSF_TRAIN = QuantPolicy(fwd_fmt="mxsf", bwd_fmt="mxsf", block_mode="2d", tile=8)
+MXSF_INFER = QuantPolicy(fwd_fmt="mxsf", block_mode="1d", block_1d=64,
+                         quantize_bwd=False)

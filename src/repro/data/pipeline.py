@@ -1,0 +1,63 @@
+"""Deterministic synthetic data pipelines (no corpora available offline).
+
+* ``lm_batch``     : Markov-chain token stream from a fixed random bigram
+                     transition table — learnable structure so training
+                     benchmarks can separate numeric formats (paper Fig. 2).
+* ``vision_batch`` : class-conditional patch embeddings + label — the
+                     DeiT-Tiny / Table III stand-in for ImageNet.
+
+Everything is a pure function of (seed, step), so any worker/restart
+reproduces the same batch (checkpoint/restart bitwise tests rely on this),
+and batches can be generated shard-locally from the same seed.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lm_batch", "vision_batch", "make_transition"]
+
+
+@partial(jax.jit, static_argnums=(1,))
+def make_transition(seed: int, vocab: int):
+    """Fixed sparsely-peaked bigram transition logits (vocab, vocab)."""
+    key = jax.random.PRNGKey(seed)
+    base = jax.random.normal(key, (vocab, vocab)) * 0.5
+    # sharpen: each token has a handful of likely successors
+    fav = jax.random.randint(jax.random.fold_in(key, 1), (vocab, 4), 0, vocab)
+    boost = jnp.zeros((vocab, vocab)).at[
+        jnp.arange(vocab)[:, None], fav].add(4.0)
+    return base + boost
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4))
+def lm_batch(seed, step, batch: int, seq: int, vocab: int):
+    """(tokens, labels) each (batch, seq) int32; labels = next token."""
+    trans = make_transition(seed, vocab)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + 7919), step)
+    k0, kw = jax.random.split(key)
+    first = jax.random.randint(k0, (batch,), 0, vocab)
+
+    def walk(tok, k):
+        nxt = jax.random.categorical(k, trans[tok])
+        return nxt, nxt
+
+    keys = jax.random.split(kw, seq)
+    _, toks = jax.lax.scan(lambda c, k: walk(c, k), first, keys)
+    toks = jnp.concatenate([first[None], toks], axis=0).T  # (batch, seq+1)
+    return toks[:, :seq].astype(jnp.int32), toks[:, 1 : seq + 1].astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4, 5))
+def vision_batch(seed, step, batch: int, tokens: int, dim: int, classes: int):
+    """(patch_embeds (B,T,D) bf16, labels (B,)) — class prototype + noise."""
+    key = jax.random.PRNGKey(seed)
+    protos = jax.random.normal(key, (classes, tokens, dim)) * 1.0
+    kb = jax.random.fold_in(jax.random.PRNGKey(seed + 131), step)
+    kl, kn = jax.random.split(kb)
+    labels = jax.random.randint(kl, (batch,), 0, classes)
+    noise = jax.random.normal(kn, (batch, tokens, dim)) * 1.5
+    x = protos[labels] + noise
+    return x.astype(jnp.bfloat16), labels.astype(jnp.int32)

@@ -1,0 +1,83 @@
+"""Bit-level float helpers shared by the Pallas kernels.
+
+TPU Pallas has no frexp/ldexp lowering, so exponent extraction and
+power-of-two construction are done by bit-casting — identical semantics in
+interpret mode (CPU validation) and on real TPUs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flog2", "exp2i", "rne", "decode_mxsf", "encode_mxsf"]
+
+
+def flog2(a: jax.Array) -> jax.Array:
+    """floor(log2(a)) for a >= 0 f32 (normals); -127 for zero/subnormal."""
+    bits = jax.lax.bitcast_convert_type(a.astype(jnp.float32), jnp.int32)
+    return ((bits >> 23) & 0xFF) - 127
+
+
+def exp2i(e: jax.Array) -> jax.Array:
+    """Exact 2^e for integer e in [-126, 127]."""
+    e = jnp.clip(e, -126, 127).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type((e + 127) << 23, jnp.float32)
+
+
+def rne(x: jax.Array) -> jax.Array:
+    return jax.lax.round(x, jax.lax.RoundingMethod.TO_NEAREST_EVEN)
+
+
+def decode_mxsf(code: jax.Array) -> jax.Array:
+    """MXSF byte -> value relative to the shared exponent (f32)."""
+    c = code.astype(jnp.int32)
+    s = (c >> 7) & 1
+    ee = (c >> 5) & 3
+    m5 = (c & 31).astype(jnp.float32)
+    eee = (c >> 2) & 7
+    m2 = (c & 3).astype(jnp.float32)
+    v25 = (1.0 + m5 / 32.0) * exp2i(ee - 3)
+    v32n = (1.0 + m2 / 4.0) * exp2i(eee - 10)
+    v32s = (m2 / 4.0) * jnp.float32(2.0 ** -9)
+    mag = jnp.where(ee > 0, v25, jnp.where(eee > 0, v32n, v32s))
+    return jnp.where(s == 1, -mag, mag)
+
+
+def encode_mxsf(xa: jax.Array) -> jax.Array:
+    """Relative value (|xa| < 2) -> MXSF byte.  Mirrors formats._encode_safe_rel."""
+    xa = xa.astype(jnp.float32)
+    s = (xa < 0).astype(jnp.int32)
+    a = jnp.abs(xa)
+    e = flog2(a)
+
+    # E2M5 regime (gap < 3)
+    e25 = jnp.clip(e, -2, 0)
+    m25 = rne(a * exp2i(5 - e25))
+    ovf = m25 >= 64
+    e25 = jnp.where(ovf, e25 + 1, e25)
+    m25 = jnp.where(ovf, 32.0, m25)
+    top = e25 > 0
+    e25 = jnp.where(top, 0, e25)
+    m25 = jnp.where(top, 63.0, m25)
+    code25 = ((e25 + 3) << 5) | (m25.astype(jnp.int32) - 32)
+
+    # E3M2 regime (gap >= 3)
+    e32 = jnp.clip(e, -9, -3)
+    sub = a < 2.0 ** -9
+    step = jnp.where(sub, jnp.float32(2.0 ** -11), exp2i(e32 - 2))
+    q = rne(a / step)
+    promote = sub & (q >= 4)
+    q = jnp.where(promote, 4.0, q)
+    e32 = jnp.where(promote, -9, e32)
+    sub = sub & ~promote
+    novf = (~sub) & (q >= 8)
+    e32 = jnp.where(novf, e32 + 1, e32)
+    q = jnp.where(novf, 4.0, q)
+    cross = e32 > -3
+    eee = jnp.where(sub, 0, e32 + 10)
+    m2 = jnp.where(sub, q, q - 4.0).astype(jnp.int32)
+    code32 = (eee << 2) | m2
+    code32 = jnp.where(cross, 1 << 5, code32)
+
+    code = jnp.where(a == 0, 0, jnp.where(e >= -2, code25, code32))
+    return (code | (s << 7)).astype(jnp.uint8)

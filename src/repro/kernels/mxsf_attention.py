@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: flash attention over an MXSF-packed KV cache.
+
+The serving-side §Perf result (EXPERIMENTS.md cell C) stores the KV cache as
+MXSF codes; this kernel consumes the codes *directly* — decode happens in
+VMEM per tile, the S x L score matrix never exists, and HBM reads of the
+cache are 1 byte/element (+1/dh scale). This is the SAFE-MAC dataflow
+(decode feeding the MAC array) mapped onto MXU tiles.
+
+Layout:
+  q        : (BH, S, dh)  bf16/f32 — one row per (batch x q-head)
+  k/v codes: (BKV, L, dh) uint8    — one row per (batch x kv-head)
+  k/v scale: (BKV, L)     uint8    — E8M0 per (position, head) row
+GQA: q row bh maps to kv row bh // group.
+
+Grid (BH, S/Cq, L/Ck), L innermost; VMEM scratch carries the online-softmax
+state (m, l, acc) across the L loop.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import decode_mxsf, exp2i
+
+SCALE_BIAS = 127
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, o_ref,
+                 m_ref, l_ref, acc_ref, *, nk: int, cq: int, ck: int,
+                 dh: int, causal: bool, kv_len: int):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                      # (Cq, dh)
+    kse = ks_ref[0].astype(jnp.int32) - SCALE_BIAS        # (Ck,)
+    vse = vs_ref[0].astype(jnp.int32) - SCALE_BIAS
+    k = decode_mxsf(kc_ref[0]) * exp2i(kse)[:, None]      # (Ck, dh)
+    v = decode_mxsf(vc_ref[0]) * exp2i(vse)[:, None]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s / math.sqrt(dh)                                  # (Cq, Ck)
+    qpos = iq * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+    kpos = jk * ck + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+    mask = kpos < kv_len
+    if causal:
+        mask &= kpos <= qpos
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "cq", "ck", "kv_len",
+                                             "interpret"))
+def mxsf_flash_attention(q, k_codes, k_scales, v_codes, v_scales, *,
+                         causal: bool = True, cq: int = 256, ck: int = 256,
+                         kv_len: int = -1, interpret: bool = False):
+    """Flash attention over MXSF-packed K/V.
+
+    q: (BH, S, dh); k/v codes: (BKV, L, dh) uint8; k/v scales: (BKV, L) uint8.
+    ``kv_len``: number of valid cache positions (rest masked; -1 = all).
+    Returns (BH, S, dh) in q.dtype.
+    """
+    BH, S, dh = q.shape
+    BKV, L, dh2 = k_codes.shape
+    assert dh == dh2 and BH % BKV == 0
+    g = BH // BKV
+    cq = min(cq, S)
+    ck = min(ck, L)
+    assert S % cq == 0 and L % ck == 0, (S, cq, L, ck)
+    nk = L // ck
+    kv_len = L if kv_len < 0 else kv_len
+
+    kernel = functools.partial(_attn_kernel, nk=nk, cq=cq, ck=ck, dh=dh,
+                               causal=causal, kv_len=kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, S // cq, nk),
+        in_specs=[
+            pl.BlockSpec((1, cq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, ck, dh), lambda b, i, j, g=g: (b // g, j, 0)),
+            pl.BlockSpec((1, ck), lambda b, i, j, g=g: (b // g, j)),
+            pl.BlockSpec((1, ck, dh), lambda b, i, j, g=g: (b // g, j, 0)),
+            pl.BlockSpec((1, ck), lambda b, i, j, g=g: (b // g, j)),
+        ],
+        out_specs=pl.BlockSpec((1, cq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((cq,), jnp.float32),       # running max
+            pltpu.VMEM((cq,), jnp.float32),       # running denom
+            pltpu.VMEM((cq, dh), jnp.float32),    # accumulator
+        ],
+        interpret=interpret,
+    )(q, k_codes, k_scales, v_codes, v_scales)

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: MXSF block quantization (the paper's MXSF Converter).
+
+Tiles the input over a (rows, cols) grid; each kernel invocation loads a
+(TM, TK) tile into VMEM, computes per-block shared exponents (block =
+``(bm, bk)`` elements, e.g. (1, 32) rows or (8, 8) training tiles), encodes
+every element into the MXSF byte, and writes the uint8 code tile plus the
+E8M0 scale tile.
+
+MXU alignment: TK is a multiple of 128 (lane dim), TM a multiple of 8
+(sublane) — see BlockSpec choices in ``ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import encode_mxsf, exp2i, flog2
+
+SCALE_BIAS = 127
+
+
+def _quant_kernel(x_ref, codes_ref, scale_ref, *, bm: int, bk: int):
+    x = x_ref[...].astype(jnp.float32)
+    tm, tk = x.shape
+    gm, gk = tm // bm, tk // bk
+    # block max -> shared exponent
+    xb = jnp.abs(x).reshape(gm, bm, gk, bk)
+    amax = xb.max(axis=(1, 3))
+    se = jnp.where(amax > 0, flog2(amax), -127)
+    # scale each element by 2^-S_e and encode
+    se_el = jnp.broadcast_to(se[:, None, :, None], (gm, bm, gk, bk)).reshape(tm, tk)
+    xa = x * exp2i(-se_el)
+    codes_ref[...] = encode_mxsf(xa)
+    scale_ref[...] = jnp.clip(se + SCALE_BIAS, 0, 255).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tm", "tk", "interpret"))
+def mxsf_quantize_pallas(x: jax.Array, *, block=(1, 32), tm: int = 256,
+                         tk: int = 512, interpret: bool = False):
+    """Quantize a 2D f32/bf16 array to MXSF codes + E8M0 scales.
+
+    Returns ``(codes[M, K] uint8, scales[M/bm, K/bk] uint8)``.
+    Shapes must be multiples of the tile; ``ops.py`` handles padding.
+    """
+    m, k = x.shape
+    bm, bk = block
+    tm = min(tm, m)
+    tk = min(tk, k)
+    assert m % tm == 0 and k % tk == 0, (m, k, tm, tk)
+    assert tm % bm == 0 and tk % bk == 0, (tm, tk, block)
+    grid = (m // tm, k // tk)
+    kernel = functools.partial(_quant_kernel, bm=bm, bk=bk)
+    codes, scales = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tm, tk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j: (i, j)),
+            pl.BlockSpec((tm // bm, tk // bk), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.uint8),
+            jax.ShapeDtypeStruct((m // bm, k // bk), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(x)
+    return codes, scales

@@ -1,0 +1,62 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to tile multiples and backend dispatch: on TPU the kernels
+run compiled; everywhere else they run in ``interpret=True`` mode (Python
+emulation of the kernel body), which is how this CPU container validates
+them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .mx_matmul import mxsf_matmul_pallas
+from .mxsf_attention import mxsf_flash_attention
+from .mxsf_quant import mxsf_quantize_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2d(x, mult_m, mult_k):
+    m, k = x.shape
+    pm, pk = (-m) % mult_m, (-k) % mult_k
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    return x
+
+
+def mxsf_quantize(x: jax.Array, block=(1, 32), tm: int = 256, tk: int = 512):
+    """MXSF-quantize a 2D array via the Pallas kernel; crops padding."""
+    m, k = x.shape
+    bm, bk = block
+    tm_eff = min(tm, max(bm, 8))  # never below a block / sublane
+    xp = _pad2d(x, max(tm, bm), max(tk, bk))
+    mp, kp = xp.shape
+    tm = min(tm, mp)
+    tk = min(tk, kp)
+    codes, scales = mxsf_quantize_pallas(xp, block=tuple(block), tm=tm, tk=tk,
+                                         interpret=_interpret())
+    return codes[:m, :k], scales[: -(-m // bm), : -(-k // bk)]
+
+
+def mxsf_matmul(x_codes, x_scales, w_codes, w_scales, xblk=(1, 32),
+                wblk=(32, 1), tm: int = 256, tn: int = 256, tk: int = 256):
+    """Packed MXSF (M,K)@(K,N) via the Pallas dequant-matmul kernel.
+
+    Requires tile-aligned shapes (the serving path pads upstream).
+    """
+    return mxsf_matmul_pallas(x_codes, x_scales, w_codes, w_scales,
+                              xblk=tuple(xblk), wblk=tuple(wblk),
+                              tm=tm, tn=tn, tk=tk, interpret=_interpret())
+
+
+def mxsf_attention(q, k_codes, k_scales, v_codes, v_scales, *, causal=True,
+                   cq: int = 256, ck: int = 256, kv_len: int = -1):
+    """Flash attention over an MXSF-packed KV cache (serving hot path)."""
+    return mxsf_flash_attention(q, k_codes, k_scales, v_codes, v_scales,
+                                causal=causal, cq=cq, ck=ck, kv_len=kv_len,
+                                interpret=_interpret())

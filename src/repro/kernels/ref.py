@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels (tested bit-exact vs interpret)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core import blocking as B
+
+
+def mxsf_quantize_ref(x, block=(1, 32)):
+    """Oracle for mxsf_quantize_pallas: packed codes + E8M0 scales."""
+    qt = B.quantize(x, "mxsf", tuple(block))
+    return qt.codes, qt.scale_e8m0
+
+
+def mxsf_matmul_ref(x_codes, x_scales, w_codes, w_scales, xblk, wblk):
+    """Oracle for mxsf_matmul_pallas: dequantize both operands, f32 matmul."""
+    m, k = x_codes.shape
+    _, n = w_codes.shape
+    qx = B.QuantizedTensor(x_codes, x_scales, "mxsf", tuple(xblk), (m, k), "float32")
+    qw = B.QuantizedTensor(w_codes, w_scales, "mxsf", tuple(wblk), (k, n), "float32")
+    return jnp.matmul(B.dequantize(qx), B.dequantize(qw),
+                      preferred_element_type=jnp.float32)
+
+
+def mxsf_qdq_matmul_ref(x, w, xblk=(1, 32), wblk=(32, 1)):
+    """End-to-end oracle: quantize f32 inputs then matmul."""
+    xq = B.qdq(x, "mxsf", tuple(xblk))
+    wq = B.qdq(w, "mxsf", tuple(wblk))
+    return jnp.matmul(xq, wq, preferred_element_type=jnp.float32)
+
+
+def mxsf_flash_attention_ref(q, k_codes, k_scales, v_codes, v_scales,
+                             causal=True, kv_len=-1):
+    """Oracle: dequantize the packed cache, plain softmax attention."""
+    import jax
+    BH, S, dh = q.shape
+    BKV, L, _ = k_codes.shape
+    g = BH // BKV
+    kv_len = L if kv_len < 0 else kv_len
+    k = B.dequantize(B.QuantizedTensor(k_codes, k_scales[..., None], "mxsf",
+                                       (dh,), k_codes.shape, "float32"))
+    v = B.dequantize(B.QuantizedTensor(v_codes, v_scales[..., None], "mxsf",
+                                       (dh,), v_codes.shape, "float32"))
+    k = jnp.repeat(k, g, axis=0)
+    v = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("bsd,bld->bsl", q.astype(jnp.float32), k) / (dh ** 0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(L)[None, :]
+    mask = kpos < kv_len
+    if causal:
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bsl,bld->bsd", p, v).astype(q.dtype)

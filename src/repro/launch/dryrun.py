@@ -1,0 +1,365 @@
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real ``train_step`` (train shapes) or
+``serve_step`` (decode shapes) / ``prefill`` (prefill shapes) against
+ShapeDtypeStruct inputs on the production mesh, compiles it, and records:
+
+  * ``memory_analysis``  — per-device HBM (args/outputs/temps) => "it fits"
+  * ``cost_analysis``    — per-device HLO FLOPs + bytes accessed
+  * collective bytes     — parsed from the compiled SPMD module text, per
+                           collective type (all-gather/all-reduce/...)
+  * roofline terms       — seconds against TPU v5e peak numbers
+                           (197 TF/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI)
+
+Results land in ``experiments/dryrun/<arch>__<shape>__<mesh>.json`` and feed
+EXPERIMENTS.md §Dry-run / §Roofline via ``benchmarks/roofline.py``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, get_config, list_configs
+from ..core import sharding as shd
+from ..core.policy import MXSF_INFER, MXSF_TRAIN, QuantPolicy
+from ..models import model as M
+from ..optim.adamw import OptConfig
+from ..train import step as T
+from . import hlo_cost
+from . import mesh as mesh_lib
+
+# TPU v5e single-chip peaks
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s/link
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# per-arch train-step defaults (config choices, not hillclimb items):
+# the 400B MoE needs gradient accumulation + bf16 moments to fit 8/16 GB HBM
+ARCH_TRAIN_OVERRIDES = {
+    # mb=4 is the EXPERIMENTS.md §Perf cell-B operating point (mb=8 was the
+    # recorded baseline; mb=2 exceeds HBM)
+    "llama4-maverick-400b-a17b": dict(microbatches=4, moment_dtype="bfloat16",
+                                      remat="full"),
+    "qwen2.5-32b": dict(microbatches=4),
+    "zamba2-7b": dict(microbatches=4),
+    "gemma2-9b": dict(microbatches=2),
+}
+# ring-algorithm byte multipliers (per-device bytes on the wire / operand)
+_COLL_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(tok_dtype, 4)
+
+
+def parse_collectives(hlo_text: str):
+    """Sum per-device operand bytes of every collective op, by type."""
+    out = {c: {"count": 0, "bytes": 0} for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for coll in COLLECTIVES:
+            tag = f" {coll}("
+            if tag in line or line.lstrip().startswith(f"{coll}("):
+                idx = line.find(coll + "(")
+                if idx < 0:
+                    continue
+                # result type: first dtype[shape] before the op name
+                pre = line[:idx]
+                shapes_pre = _SHAPE_RE.findall(pre)
+                # operand types: dtype[shape] tokens inside the call parens
+                call = line[idx + len(coll):]
+                depth = 0
+                end = len(call)
+                for i, ch in enumerate(call):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            end = i
+                            break
+                shapes_in = _SHAPE_RE.findall(call[:end])
+                use = shapes_in or shapes_pre
+                b = sum(_shape_bytes(d, s) for d, s in use
+                        if d in _DTYPE_BYTES)
+                out[coll]["count"] += 1
+                out[coll]["bytes"] += b
+                break
+    return out
+
+
+def roofline_terms(flops, hbm_bytes, coll):
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    coll_s = sum(v["bytes"] * _COLL_MULT[c] for c, v in coll.items()) / ICI_BW
+    dominant = max([("compute", compute_s), ("memory", memory_s),
+                    ("collective", coll_s)], key=lambda kv: kv[1])[0]
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dominant}
+
+
+def _analytic_model_flops(cfg, shape, params_specs):
+    import math
+    n_total = sum(math.prod(x.shape) for x in jax.tree.leaves(params_specs))
+    if cfg.n_experts:
+        # padded (dead) experts never receive tokens; only real inactive
+        # routed experts count against active params
+        expert_p = 3 * cfg.d_model * cfg.expert_ff
+        n_moe = cfg.n_layers // cfg.moe_every
+        n_active = n_total - n_moe * (cfg.padded_experts - cfg.top_k) * expert_p
+    else:
+        n_active = n_total
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+    elif cfg.family == "encdec" and shape.kind == "prefill":
+        tokens = shape.global_batch * cfg.enc_seq  # prefill = encoder pass
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n_active * tokens, n_total, n_active
+
+
+def lower_cell(arch: str, shape_name: str, mesh, policy: QuantPolicy,
+               tcfg: T.TrainConfig, ocfg: OptConfig,
+               param_dtype: str = "float32"):
+    """Lower + compile one cell; returns (record, compiled, lowered)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = M.cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}, None, None
+
+    rules = mesh_lib.MeshRules(mesh)
+    hints = lambda: shd.mesh_context(mesh, rules.dp, rules.tp)
+    t0 = time.time()
+    if shape.kind == "train":
+        state_specs = jax.eval_shape(
+            lambda: T.init_state(jax.random.PRNGKey(0), cfg, ocfg,
+                                 param_dtype=param_dtype))
+        state_sh = mesh_lib.state_shardings(rules, state_specs)
+        batch_specs = M.train_specs(cfg, shape)
+        batch_sh = mesh_lib.batch_shardings(rules, batch_specs)
+        step_fn = T.make_train_step(cfg, policy, ocfg, tcfg)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        with hints():
+            lowered = jitted.lower(state_specs, batch_specs)
+        params_specs = state_specs["params"]
+    elif shape.kind == "prefill":
+        params_specs = jax.eval_shape(
+            lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+        params_sh = rules.param_sharding_tree(params_specs)
+        batch_specs = M.train_specs(cfg, shape)
+        batch_sh = mesh_lib.batch_shardings(rules, batch_specs)
+        cache_specs = jax.eval_shape(
+            lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                 ring=False))
+        cache_sh = mesh_lib.cache_shardings(rules, cache_specs,
+                                            shape.global_batch)
+
+        def prefill_fn(params, batch, cache):
+            return M.prefill(params, batch, cache, cfg, policy)
+
+        jitted = jax.jit(prefill_fn,
+                         in_shardings=(params_sh, batch_sh, cache_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(2,))
+        with hints():
+            lowered = jitted.lower(params_specs, batch_specs, cache_specs)
+    else:  # decode
+        params_specs = jax.eval_shape(
+            lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+        params_sh = rules.param_sharding_tree(params_specs)
+        dspec = M.decode_specs(cfg, shape, kv_fmt=policy.kv_cache_fmt)
+        cache_sh = mesh_lib.cache_shardings(rules, dspec["cache"],
+                                            shape.global_batch)
+        tok_sh = rules.named(rules.data_spec(dspec["tokens"].shape))
+
+        def serve_fn(params, tokens, cache, pos):
+            return M.decode_step(params, tokens, cache, pos, cfg, policy)
+
+        jitted = jax.jit(serve_fn,
+                         in_shardings=(params_sh, tok_sh, cache_sh, None),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(2,))
+        with hints():
+            lowered = jitted.lower(params_specs, dspec["tokens"],
+                                   dspec["cache"], dspec["pos"])
+
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # loop-aware walker: XLA's cost_analysis does not multiply while-loop
+    # trip counts (scans!), so flops/bytes/collectives come from hlo_cost
+    walk = hlo_cost.analyze(hlo)
+    coll = walk["collectives"]
+    flops = float(walk["flops"])
+    hbm = float(walk["bytes"])
+    terms = roofline_terms(flops, hbm, coll)
+    raw_cost = {"flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+    model_flops, n_total, n_active = _analytic_model_flops(
+        get_config(arch), SHAPES[shape_name], params_specs)
+    n_dev = mesh.size
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "n_devices": n_dev,
+        "compile_seconds": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes_per_device": (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "cost": {"flops_per_device": flops, "hbm_bytes_per_device": hbm},
+        "xla_cost_analysis_raw": raw_cost,  # loop-UNaware; for reference
+        "collectives": coll,
+        "roofline": terms,
+        "model_flops_global": model_flops,
+        "model_flops_per_device": model_flops / n_dev,
+        "useful_flops_fraction": (model_flops / n_dev / flops
+                                  if flops else None),
+        "params_total": n_total, "params_active": n_active,
+        "policy": {"fwd": policy.fwd_fmt, "block_mode": policy.block_mode,
+                   "kv_cache": policy.kv_cache_fmt,
+                   "param_dtype": param_dtype,
+                   "save_packed": policy.save_packed},
+    }
+    return rec, compiled, lowered
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="also run the 2x16x16 multi-pod mesh")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--policy", default="mxsf",
+                    choices=["mxsf", "bf16", "mxfp8_e4m3", "mxfp8_e2m5",
+                             "mxint8"])
+    ap.add_argument("--block-mode", default=None, choices=["1d", "2d", "none"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="dots", choices=["none", "dots", "full"])
+    ap.add_argument("--param-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--kv-cache", default="",
+                    help="packed KV cache format for decode cells, e.g. mxsf")
+    ap.add_argument("--save-packed", type=int, default=1)
+    ap.add_argument("--attn-quant", type=int, default=1,
+                    help="0: keep QK^T/AV operands unquantized (ablation)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [a for a in list_configs()
+             if a not in ("deit-tiny",)] if args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(("16x16", False))
+    if args.multi_pod or args.multi_pod_only:
+        meshes.append(("2x16x16", True))
+
+    if args.policy == "bf16":
+        policy = QuantPolicy(block_mode="none")
+    else:
+        policy = MXSF_TRAIN.replace(fwd_fmt=args.policy, bwd_fmt=args.policy)
+    if args.block_mode:
+        policy = policy.replace(block_mode=args.block_mode)
+    tcfg = T.TrainConfig(remat=args.remat, microbatches=args.microbatches)
+    ocfg = OptConfig()
+
+    n_ok = n_skip = n_fail = 0
+    for mesh_name, multi in meshes:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for shape_name in shapes:
+                tag = f"{arch}__{shape_name}__{mesh_name}"
+                out_path = os.path.join(args.out, tag + ".json")
+                try:
+                    # serving cells use the 1D inference policy per the paper
+                    pol = policy
+                    if policy.enabled and SHAPES[shape_name].kind != "train":
+                        pol = policy.replace(block_mode="1d",
+                                             quantize_bwd=False)
+                    if args.kv_cache and SHAPES[shape_name].kind == "decode":
+                        pol = pol.replace(kv_cache_fmt=args.kv_cache)
+                    if not args.save_packed:
+                        pol = pol.replace(save_packed=False)
+                    if not args.attn_quant and pol.enabled:
+                        pol = pol.replace(attn_matmuls=False)
+                    over = dict(ARCH_TRAIN_OVERRIDES.get(arch, {}))
+                    mb = (args.microbatches if args.microbatches > 1
+                          else over.get("microbatches", 1))
+                    cell_t = tcfg.replace(
+                        microbatches=mb,
+                        remat=over.get("remat", tcfg.remat))
+                    cell_o = (ocfg.replace(moment_dtype=over["moment_dtype"])
+                              if "moment_dtype" in over else ocfg)
+                    rec, compiled, lowered = lower_cell(
+                        arch, shape_name, mesh, pol, cell_t, cell_o,
+                        param_dtype=args.param_dtype)
+                    if "skipped" in rec:
+                        n_skip += 1
+                        print(f"[skip] {tag}: {rec['skipped']}")
+                    else:
+                        n_ok += 1
+                        r = rec["roofline"]
+                        print(f"[ ok ] {tag}: compile={rec['compile_seconds']}s"
+                              f" mem/dev={rec['memory']['peak_bytes_per_device']/1e9:.2f}GB"
+                              f" compute={r['compute_s']*1e3:.2f}ms"
+                              f" mem={r['memory_s']*1e3:.2f}ms"
+                              f" coll={r['collective_s']*1e3:.2f}ms"
+                              f" dom={r['dominant']}")
+                    with open(out_path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    del compiled, lowered
+                except Exception as e:  # noqa
+                    n_fail += 1
+                    print(f"[FAIL] {tag}: {e}")
+                    with open(out_path + ".err", "w") as f:
+                        f.write(traceback.format_exc())
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,349 @@
+"""Loop-aware cost model over compiled HLO text.
+
+``compiled.cost_analysis()`` on the CPU backend does NOT multiply while-loop
+bodies by their trip counts, so anything under ``lax.scan`` (layer stacks,
+attention chunks, grad accumulation) is undercounted by the trip count; the
+same holds for collectives that live inside a scanned layer body.  This
+module re-derives the three roofline inputs by walking the HLO computation
+graph and multiplying while bodies by their (statically parsed) trip counts:
+
+  * flops       : exact for dot (2*M*N*K from shapes + contracting dims),
+                  1/elem for elementwise+reduce ops (transcendentals incl.)
+  * hbm bytes   : per top-level op, operands + results; fusions atomic
+                  (post-fusion HLO => that's the actual traffic model)
+  * collectives : per-type operand bytes, loop-multiplied
+
+All counts are per-device (the HLO module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+                "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_TOK = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+
+
+def _shape_elems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def _first_shapes(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_TOK.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    return sum(_DTYPE_BYTES[dt] * int(math.prod(dims) if dims else 1)
+               for dt, dims in shapes)
+
+
+class Op:
+    __slots__ = ("name", "kind", "result", "operands_txt", "attrs", "line")
+
+    def __init__(self, name, kind, result, operands_txt, line):
+        self.name = name
+        self.kind = kind
+        self.result = result          # list[(dtype, dims)]
+        self.operands_txt = operands_txt
+        self.line = line
+
+
+class Computation:
+    def __init__(self, name):
+        self.name = name
+        self.ops: List[Op] = []
+        self.symbols: Dict[str, List[Tuple[str, List[int]]]] = {}
+
+
+ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "power", "exponential", "tanh",
+    "log", "rsqrt", "sqrt", "negate", "maximum", "minimum", "compare",
+    "select", "and", "or", "xor", "convert", "floor", "ceil",
+    "round-nearest-even", "round-nearest-afz", "abs", "sign", "clamp",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "exponential-minus-one", "log-plus-one", "sine", "cosine", "erf",
+}
+NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+              "bitcast", "bitcast-convert", "copy", "after-all", "domain",
+              "opt-barrier", "partition-id", "replica-id"}
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = re.sub(r"/\*.*?\*/", "", raw).rstrip()
+        if not line or line.lstrip().startswith("//"):
+            continue
+        hdr = _COMP_HDR.match(line.strip()) if line.endswith("{") else None
+        if hdr:
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            if line.strip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, result_txt, kind, rest = m.groups()
+        result = _first_shapes(result_txt)
+        op = Op(name, kind, result, rest, line)
+        cur.ops.append(op)
+        cur.symbols[name] = result
+    if entry:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _called(op: Op, which: str) -> List[str]:
+    out = []
+    for m in re.finditer(which + r"=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?",
+                         op.line):
+        for part in m.group(1).split(","):
+            out.append(part.strip().lstrip("%"))
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition ~= trip count."""
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((-?\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    result_elems = sum(int(math.prod(d) if d else 1) for _, d in op.result)
+    lhs_txt = op.operands_txt.split(",")[0]
+    lhs_shapes = _first_shapes(lhs_txt)
+    if not lhs_shapes:  # untyped operand: resolve via symbol table
+        ref = re.search(r"%([\w.\-]+)", lhs_txt)
+        if ref and ref.group(1) in comp.symbols:
+            lhs_shapes = comp.symbols[ref.group(1)]
+    k = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    if m and lhs_shapes:
+        dims = lhs_shapes[0][1]
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                k *= dims[int(idx)]
+    return 2.0 * result_elems * k
+
+
+def _operand_bytes(op: Op, comp: Computation) -> int:
+    """Bytes of the operands as written inline (typed operand syntax)."""
+    # operand list runs until the matching close paren
+    depth, end = 1, len(op.operands_txt)
+    for i, ch in enumerate(op.operands_txt):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = op.operands_txt[:end]
+    shapes = _first_shapes(inner)
+    if shapes:
+        return _bytes_of(shapes)
+    # untyped operand syntax: resolve via symbol table
+    total = 0
+    for ref in re.findall(r"%([\w.\-]+)", inner):
+        if ref in comp.symbols:
+            total += _bytes_of(comp.symbols[ref])
+    return total
+
+
+class CostTotals:
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll = {c: {"count": 0, "bytes": 0.0} for c in COLLECTIVES}
+
+    def scaled(self, k):
+        out = CostTotals()
+        out.flops = self.flops * k
+        out.bytes = self.bytes * k
+        for c in COLLECTIVES:
+            out.coll[c]["count"] = self.coll[c]["count"] * k
+            out.coll[c]["bytes"] = self.coll[c]["bytes"] * k
+        return out
+
+    def add(self, other):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for c in COLLECTIVES:
+            self.coll[c]["count"] += other.coll[c]["count"]
+            self.coll[c]["bytes"] += other.coll[c]["bytes"]
+
+
+def _comp_cost(comp: Computation, comps, memo, *, atomic_fusion=True,
+               count_bytes=True) -> CostTotals:
+    key = (comp.name, count_bytes)
+    if key in memo:
+        return memo[key]
+    total = CostTotals()
+    memo[key] = total  # break cycles defensively
+    for op in comp.ops:
+        result_elems = sum(int(math.prod(d) if d else 1) for _, d in op.result)
+        if op.kind == "while":
+            body = _called(op, "body")
+            cond = _called(op, "condition")
+            trips = _trip_count(comps[cond[0]]) if cond and cond[0] in comps else 1
+            if body and body[0] in comps:
+                inner = _comp_cost(comps[body[0]], comps, memo,
+                                   atomic_fusion=atomic_fusion,
+                                   count_bytes=count_bytes)
+                total.add(inner.scaled(trips))
+            continue
+        if op.kind == "conditional":
+            branches = _called(op, "branch_computations") or \
+                (_called(op, "true_computation")
+                 + _called(op, "false_computation"))
+            worst = None
+            for b in branches:
+                if b in comps:
+                    c = _comp_cost(comps[b], comps, memo,
+                                   atomic_fusion=atomic_fusion,
+                                   count_bytes=count_bytes)
+                    if worst is None or c.flops > worst.flops:
+                        worst = c
+            if worst:
+                total.add(worst)
+            continue
+        if op.kind == "fusion":
+            calls = _called(op, "calls")
+            if calls and calls[0] in comps:
+                inner = _comp_cost(comps[calls[0]], comps, memo,
+                                   atomic_fusion=atomic_fusion,
+                                   count_bytes=False)  # fused temps are free
+                total.flops += inner.flops
+                for c in COLLECTIVES:
+                    total.coll[c]["count"] += inner.coll[c]["count"]
+                    total.coll[c]["bytes"] += inner.coll[c]["bytes"]
+            if count_bytes:
+                total.bytes += _inplace_aware_bytes(op, comp)
+            continue
+        if op.kind in ("call", "async-start", "async-done"):
+            to = _called(op, "to_apply") or _called(op, "called_computation")
+            if to and to[0] in comps:
+                total.add(_comp_cost(comps[to[0]], comps, memo,
+                                     atomic_fusion=atomic_fusion,
+                                     count_bytes=count_bytes))
+            continue
+        base = next((c for c in COLLECTIVES if op.kind == c
+                     or op.kind == c + "-start"), None)
+        if base is not None:
+            b = _operand_bytes(op, comp)
+            total.coll[base]["count"] += 1
+            total.coll[base]["bytes"] += b
+            if count_bytes:
+                total.bytes += b + _bytes_of(op.result)
+            continue
+        if any(op.kind == c + "-done" for c in COLLECTIVES):
+            continue  # counted at -start
+        if op.kind == "dot":
+            total.flops += _dot_flops(op, comp)
+            if count_bytes:
+                total.bytes += _operand_bytes(op, comp) + _bytes_of(op.result)
+            continue
+        if op.kind == "custom-call":
+            # CPU oneDNN matmul shows up as custom-call; treat as dot if the
+            # config mentions matmul, else traffic only
+            if "matmul" in op.line or "dot" in op.line:
+                shapes = _first_shapes(op.operands_txt)
+                if len(shapes) >= 2:
+                    m_elems = sum(int(math.prod(d) if d else 1)
+                                  for _, d in op.result)
+                    k = shapes[0][1][-1] if shapes[0][1] else 1
+                    total.flops += 2.0 * m_elems * k
+            if count_bytes:
+                total.bytes += _operand_bytes(op, comp) + _bytes_of(op.result)
+            continue
+        if op.kind in NO_TRAFFIC:
+            continue
+        # generic op
+        if op.kind in ELEMWISE or op.kind.startswith("reduce"):
+            total.flops += result_elems
+        if count_bytes:
+            total.bytes += _inplace_aware_bytes(op, comp)
+    return total
+
+
+def _inplace_aware_bytes(op: Op, comp: Computation) -> int:
+    """Operand+result bytes, modeling XLA's in-place buffer aliasing.
+
+    dynamic-update-slice on a loop-carried buffer writes ONLY the update
+    slice (the big operand and result alias); dynamic-slice reads only the
+    slice it produces.  Charging the full buffer per scan iteration would
+    invent O(layers x cache) phantom traffic.
+    """
+    kind = op.kind
+    tag = ""
+    if kind == "fusion":
+        m = re.search(r'op_name="[^"]*?(dynamic_update_slice|dynamic-update-'
+                      r'slice|dynamic_slice|dynamic-slice)', op.line)
+        if m:
+            tag = m.group(1).replace("_", "-")
+    elif kind in ("dynamic-update-slice", "dynamic-slice"):
+        tag = kind
+    if tag.endswith("update-slice"):
+        shapes = _first_shapes(op.operands_txt)
+        if not shapes:
+            total = 0
+            for ref in re.findall(r"%([\w.\-]+)", op.operands_txt):
+                if ref in comp.symbols:
+                    shapes = shapes + comp.symbols[ref]
+        if shapes:
+            big = max(_bytes_of([sh]) for sh in shapes)
+            ops_b = sum(_bytes_of([sh]) for sh in shapes)
+            update = ops_b - big
+            return 2 * update  # read update + write aliased slice
+        return _bytes_of(op.result)
+    if tag.endswith("dynamic-slice"):
+        return 2 * _bytes_of(op.result)  # read + write the slice only
+    return _operand_bytes(op, comp) + _bytes_of(op.result)
+
+
+def analyze(hlo_text: str) -> dict:
+    comps = parse_module(hlo_text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    memo: Dict[str, CostTotals] = {}
+    t = _comp_cost(entry, comps, memo)
+    return {
+        "flops": t.flops,
+        "bytes": t.bytes,
+        "collectives": {c: dict(count=int(v["count"]), bytes=float(v["bytes"]))
+                        for c, v in t.coll.items()},
+    }

@@ -1,0 +1,398 @@
+"""Composable model blocks (pure JAX, param pytrees, no framework deps).
+
+Every matmul that the paper's accelerator would execute goes through
+``mx_dot`` / ``mx_einsum`` so the MXSF policy applies uniformly: QKV/O
+projections, MLP, MoE experts, attention score/context matmuls.  Softmax,
+norms, router and residual math stay in f32 (paper §I keeps these
+dequantized).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core import sharding as shd
+from ..core.mx_dot import mx_dot, mx_einsum
+from ..core.policy import QuantPolicy
+
+
+def _dense_init(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def dense(x, w, policy):
+    """mx_dot with cast-at-use: f32 master weights -> activation dtype."""
+    return mx_dot(x, w.astype(x.dtype), policy)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d):
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["w"]).astype(x.dtype)
+
+
+def layernorm_init(d):
+    return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["w"] + p["b"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D), positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, SWA, softcap) — shared by all transformer families
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig):
+    d, dh, h, kv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], d, h * dh),
+        "wk": _dense_init(ks[1], d, kv * dh),
+        "wv": _dense_init(ks[2], d, kv * dh),
+        "wo": _dense_init(ks[3], h * dh, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * dh,), jnp.float32)
+    return p
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(*x.shape[:-1], n, dh)
+
+
+def _attn_mask_bias(qpos, kpos, *, causal: bool, window: Optional[int]):
+    """Additive mask from broadcast position comparisons (no HBM mask)."""
+    qp = qpos[:, :, None] if qpos is not None else None
+    kp = kpos[:, None, :]
+    allowed = kp >= 0  # negative kpos marks unwritten ring-cache slots
+    if causal and qp is not None:
+        allowed &= kp <= qp
+    if window is not None and qp is not None:
+        allowed &= kp > qp - window
+    return jnp.where(allowed, 0.0, -1e30).astype(jnp.float32)
+
+
+def attention(p, x, cfg: ModelConfig, policy: QuantPolicy, *,
+              positions=None, kv_positions=None, kv_x=None, kv_cached=None,
+              causal=True, window=None, cache=None, cache_pos=None):
+    """Generalized attention.
+
+    * self-attention train/prefill: ``kv_x=None, cache=None``
+    * cross-attention: ``kv_x`` = encoder states (positions ignored for rope)
+    * cross-attention decode: ``kv_cached`` = precomputed (k, v) dict
+    * decode: ``cache`` = {k, v} ring/full buffers, ``cache_pos`` scalar step
+    Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    g = h // kv
+
+    q = dense(x, p["wq"], policy)
+    if "bq" in p:
+        q = (q + p["bq"]).astype(x.dtype)
+    q = _split_heads(q, h, dh)
+    if kv_cached is not None:
+        k = kv_cached["k"].astype(x.dtype)
+        v = kv_cached["v"].astype(x.dtype)
+        kpos = jnp.zeros((B, k.shape[1]), jnp.int32)
+        return _attend(q, k, v, None, kpos, False, None,
+                       p, x, cfg, policy), None
+    src = x if kv_x is None else kv_x
+    k = dense(src, p["wk"], policy)
+    v = dense(src, p["wv"], policy)
+    if "bk" in p:
+        k = (k + p["bk"]).astype(x.dtype)
+        v = (v + p["bv"]).astype(x.dtype)
+    k = _split_heads(k, kv, dh)
+    v = _split_heads(v, kv, dh)
+
+    use_rope = kv_x is None and cfg.rope_theta > 0 and cfg.family != "encdec"
+    if use_rope:
+        if cache is not None:
+            pv = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (B,))
+            positions = pv[:, None] + jnp.arange(S)[None, :]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions if kv_positions is not None else positions,
+                 cfg.rope_theta)
+        # pin post-rope layout: without this GSPMD reshards the rope
+        # elementwise chain ("involuntary full rematerialization" warnings)
+        q = shd.constrain(q, "batch", None, "heads", None)
+        k = shd.constrain(k, "batch", None, "kv", None)
+
+    new_cache = None
+    if cache is not None:
+        # cache_pos may be a scalar (lockstep batch) or a (B,) vector of
+        # per-sequence positions (continuous batching, serve/engine.py)
+        pos_vec = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (B,))
+        W = (cache["k_codes"] if "k_codes" in cache else cache["k"]).shape[1]
+        slot = pos_vec % W
+
+        def _write(buf, upd):
+            return jax.vmap(
+                lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0))
+            )(buf, upd, slot)
+
+        end = pos_vec + S - 1                       # (B,)
+        idx = jnp.arange(W)
+        # absolute position held by each ring slot (unwritten slots < 0)
+        kpos = end[:, None] - ((end[:, None] - idx[None, :]) % W)
+        qpos = pos_vec[:, None] + jnp.arange(S)[None, :]
+    if cache is not None and "k_codes" in cache:
+        # 8-bit MX-packed KV cache (policy.kv_cache_fmt): new k/v quantize
+        # along dh; reads dequantize the whole (1-byte) cache.
+        from ..core import blocking as mxblk
+        fmt = policy.kv_cache_fmt or "mxsf"
+        new_cache = dict(cache)
+        for nm, val in (("k", k), ("v", v)):
+            qt = mxblk.quantize(val, fmt, (dh,))
+            new_cache[f"{nm}_codes"] = _write(cache[f"{nm}_codes"], qt.codes)
+            new_cache[f"{nm}_scales"] = _write(cache[f"{nm}_scales"],
+                                               qt.scale_e8m0)
+        kc, vc = new_cache["k_codes"], new_cache["v_codes"]
+        k = mxblk.dequantize(mxblk.QuantizedTensor(
+            kc, new_cache["k_scales"], fmt, (dh,), kc.shape, str(x.dtype)))
+        v = mxblk.dequantize(mxblk.QuantizedTensor(
+            vc, new_cache["v_scales"], fmt, (dh,), vc.shape, str(x.dtype)))
+    elif cache is not None:
+        # ring buffer (B, W, kv, dh); contiguous non-wrapping writes only
+        # (decode S=1 anywhere; prefill S>1 requires cache_pos=0, W >= S).
+        ck = _write(cache["k"], k.astype(cache["k"].dtype))
+        cv = _write(cache["v"], v.astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+    else:
+        qpos = jnp.broadcast_to(positions if positions.ndim == 2
+                                else positions[None, :], (B, S))
+        if kv_x is None:
+            kpos = qpos
+        else:  # cross-attention: all encoder slots valid
+            kpos = jnp.zeros((B, k.shape[1]), jnp.int32)
+            qpos = None
+
+    return _attend(q, k, v, qpos, kpos, causal and kv_x is None, window,
+                   p, x, cfg, policy,
+                   kv_prequant=bool(cache is not None
+                                    and "k_codes" in cache)), new_cache
+
+
+ATTN_CHUNK = 1024  # query-chunk target (flash-style; bounds score memory)
+
+
+def _pick_chunk(S: int, target: Optional[int] = None) -> int:
+    target = target if target is not None else ATTN_CHUNK  # late-bound
+    for c in range(min(S, target), 0, -1):
+        if S % c == 0:
+            return c
+    return S
+
+
+def _scores_block(qg_c, kk, vv, qpos_c, kpos, causal, window, dh, cfg,
+                  policy, out_dtype, kv_prequant=False):
+    """One query block: (B,kv,g,C,dh) x (B,kv,L,dh) -> (B,kv,g,C,dh)."""
+    scores = mx_einsum("bkgsd,bkld->bkgsl", qg_c, kk, policy,
+                       axes=(-1, -1), g_axes=(-1, -2),
+                       quant_ops=(True, not kv_prequant))
+    scores = scores.astype(jnp.float32) / math.sqrt(dh)
+    if cfg.attn_softcap:
+        scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
+    bias = _attn_mask_bias(qpos_c, kpos, causal=causal, window=window)
+    scores = scores + bias[:, None, None, :, :]
+    scores = shd.constrain(scores, "batch", "kv", None, None, "seq")
+    probs = jax.nn.softmax(scores, axis=-1).astype(out_dtype)
+    ctx = mx_einsum("bkgsl,bkld->bkgsd", probs, vv, policy,
+                    axes=(-1, -2), g_axes=(-1, -2),
+                    quant_ops=(True, not kv_prequant))
+    return shd.constrain(ctx, "batch", "kv", None, None, None)
+
+
+def _attend(q, k, v, qpos, kpos, causal, window, p, x, cfg: ModelConfig,
+            policy: QuantPolicy, kv_prequant: bool = False):
+    """Query-chunked attention: the full (S x L) score tensor never
+    materializes (peak is one (C x L) block per device).
+
+    TP assignment (core/sharding.py): the kv-head dim when it divides the
+    TP axis, else the key/cache length (sequence parallelism) — the same
+    rule covers train, prefill and decode.
+    """
+    B, S, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(B, S, kv, g, dh).transpose(0, 2, 3, 1, 4)
+    kk = k.transpose(0, 2, 1, 3)   # (B, kv, L, dh)
+    vv = v.transpose(0, 2, 1, 3)
+    qg = shd.constrain(qg, "batch", "kv", None, None, None)
+    kk = shd.constrain(kk, "batch", "kv", "seq", None)
+    vv = shd.constrain(vv, "batch", "kv", "seq", None)
+
+    chunk = _pick_chunk(S)
+    if S <= chunk:
+        ctx = _scores_block(qg, kk, vv, qpos, kpos, causal, window, dh,
+                            cfg, policy, x.dtype, kv_prequant)
+    elif qpos is None:  # cross-attention: mask depends only on kpos
+        ctx = _scores_block(qg, kk, vv, None, kpos, causal, window, dh,
+                            cfg, policy, x.dtype, kv_prequant)
+    else:
+        n = S // chunk
+        qg_c = qg.reshape(B, kv, g, n, chunk, dh).transpose(3, 0, 1, 2, 4, 5)
+        qpos_c = qpos.reshape(B, n, chunk).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def body(_, xs):
+            qc, pc = xs
+            return None, _scores_block(qc, kk, vv, pc, kpos, causal, window,
+                                       dh, cfg, policy, x.dtype, kv_prequant)
+
+        _, ctx = jax.lax.scan(body, None, (qg_c, qpos_c))
+        # (n, B, kv, g, chunk, dh) -> (B, kv, g, S, dh)
+        ctx = ctx.transpose(1, 2, 3, 0, 4, 5).reshape(B, kv, g, S, dh)
+    ctx = ctx.transpose(0, 3, 1, 2, 4).reshape(B, S, h * dh)
+    return dense(ctx, p["wo"], policy)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"wg": _dense_init(ks[0], d, f), "wu": _dense_init(ks[1], d, f),
+                "wd": _dense_init(ks[2], f, d)}
+    return {"wu": _dense_init(ks[0], d, f), "wd": _dense_init(ks[1], f, d)}
+
+
+def mlp(p, x, cfg: ModelConfig, policy: QuantPolicy):
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        gate = act(dense(x, p["wg"], policy))
+        up = dense(x, p["wu"], policy)
+        return dense(gate * up, p["wd"], policy)
+    h = jax.nn.gelu(dense(x, p["wu"], policy), approximate=True)
+    return dense(h, p["wd"], policy)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (capacity-based per-row dispatch, sort-free combine)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig):
+    d, f, E = cfg.d_model, cfg.expert_ff, cfg.padded_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], d, E, scale=0.02),
+        "we_g": jax.random.normal(ks[1], (E, d, f), jnp.float32) / math.sqrt(d),
+        "we_u": jax.random.normal(ks[2], (E, d, f), jnp.float32) / math.sqrt(d),
+        "we_d": jax.random.normal(ks[3], (E, f, d), jnp.float32) / math.sqrt(f),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg,
+                               d_ff=cfg.expert_ff * cfg.n_shared_experts)
+    return p
+
+
+def _row_dispatch(x_row, topi, topv, E, C):
+    """Dispatch one row of tokens into (E, C, d) expert buffers.
+
+    x_row: (S, d); topi/topv: (S, k).  Returns (xe, slot, valid, st, sw).
+    """
+    S, k = topi.shape
+    flat_e = topi.reshape(-1)
+    st = jnp.repeat(jnp.arange(S), k)
+    sw = topv.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], st[order], sw[order]
+    pos_in_e = jnp.arange(S * k) - jnp.searchsorted(se, se, side="left")
+    valid = pos_in_e < C
+    slot = jnp.where(valid, se * C + pos_in_e, E * C)
+    d = x_row.shape[-1]
+    buf = jnp.zeros((E * C + 1, d), x_row.dtype).at[slot].set(x_row[st])
+    return buf[: E * C].reshape(E, C, d), slot, valid, st, sw
+
+
+def moe(p, x, cfg: ModelConfig, policy: QuantPolicy):
+    """x: (B, S, d) -> (B, S, d).  Row = sequence (decode regroups upstream)."""
+    B, S, d = x.shape
+    E, k = cfg.padded_experts, cfg.top_k
+    C = max(1, int(math.ceil(S * k * cfg.capacity_factor / cfg.n_experts)))
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    if E != cfg.n_experts:  # mask padded (dead) experts out of routing
+        dead = jnp.arange(E) >= cfg.n_experts
+        logits = logits + jnp.where(dead, -1e30, 0.0)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)
+    topv = topv / jnp.clip(topv.sum(-1, keepdims=True), 1e-9)
+
+    xe, slot, valid, st, sw = jax.vmap(
+        lambda xr, ti, tv: _row_dispatch(xr, ti, tv, E, C))(x, topi, topv)
+    xe = shd.constrain(xe, "batch", "experts", None, None)
+    # expert FFN on (B, E, C, d)
+    act = jax.nn.silu if cfg.mlp != "gelu" else jax.nn.gelu
+    gate = act(mx_einsum("becd,edf->becf", xe, p["we_g"].astype(xe.dtype), policy,
+                         axes=(-1, -2), g_axes=(-1, -2)))
+    up = mx_einsum("becd,edf->becf", xe, p["we_u"].astype(xe.dtype), policy,
+                   axes=(-1, -2), g_axes=(-1, -2))
+    ye = mx_einsum("becf,efd->becd", gate * up, p["we_d"].astype(xe.dtype), policy,
+                   axes=(-1, -2), g_axes=(-1, -2))
+    ye = shd.constrain(ye, "batch", "experts", None, None)
+    # combine back to tokens
+    ye_flat = ye.reshape(B, E * C, d)
+    ye_flat = jnp.concatenate([ye_flat, jnp.zeros((B, 1, d), ye.dtype)], axis=1)
+
+    def _combine(yf, slot_r, valid_r, st_r, sw_r):
+        contrib = yf[slot_r] * jnp.where(valid_r, sw_r, 0.0)[:, None]
+        return jnp.zeros((S, d), yf.dtype).at[st_r].add(contrib)
+
+    y = jax.vmap(_combine)(ye_flat, slot, valid, st, sw.astype(x.dtype))
+    if "shared" in p:
+        y = y + mlp(p["shared"], x, cfg, policy)
+    return y
+
+
+def moe_aux_loss(x, p, cfg: ModelConfig):
+    """Switch-style load-balancing loss (fraction * probability per expert)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.padded_experts), axis=(0, 1))
+    pmean = jnp.mean(probs, axis=(0, 1))
+    return cfg.n_experts * jnp.sum(frac * pmean)

@@ -1,0 +1,81 @@
+"""Public model API: init / forward / decode + ShapeDtypeStruct input specs.
+
+``input_specs`` provides allocation-free stand-ins for every model input of
+a given (arch x shape) cell — the dry-run lowers against these.  Modality
+frontends ([audio]/[vlm]) are stubs per the assignment: precomputed
+frame/patch embeddings appear directly in the specs.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.policy import QuantPolicy
+from . import decoding, transformer
+
+init_params = transformer.init_params
+forward = transformer.forward
+init_cache = decoding.init_cache
+decode_step = decoding.decode_step
+prefill = decoding.prefill
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ModelConfig, params) -> int:
+    """Active params per token (MoE: top_k + shared experts only)."""
+    total = param_count(params)
+    if not cfg.n_experts:
+        return total
+    expert_p = 3 * cfg.d_model * cfg.expert_ff  # gate/up/down per expert
+    n_moe_layers = cfg.n_layers // cfg.moe_every
+    inactive = n_moe_layers * (cfg.n_experts - cfg.top_k) * expert_p
+    return total - inactive
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStructs for one train/prefill step's batch."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {}
+    if cfg.family == "encoder":
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        specs["label"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        return specs
+    specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "vision" and cfg.frontend_tokens:
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, ring: bool = True,
+                 kv_fmt: str = "") -> Dict:
+    """Specs for one serve_step: new token + KV/state cache at seq_len."""
+    B = shape.global_batch
+    cache = jax.eval_shape(
+        lambda: decoding.init_cache(cfg, B, shape.seq_len, ring=ring,
+                                    kv_fmt=kv_fmt))
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig):
+    """(supported, reason) for an (arch x shape) cell — DESIGN.md §5 rules."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 524k-token decode cache is the "
+                       "quadratic regime the assignment skips")
+    return True, ""

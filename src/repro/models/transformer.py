@@ -1,0 +1,332 @@
+"""Model assembly for all assigned families.
+
+Families:
+  * ``decoder`` : LM (dense / GQA / SWA / softcap / MoE / VLM-prefix)
+  * ``ssm``     : attention-free Mamba2 stack
+  * ``hybrid``  : Mamba2 backbone + one *shared* attention block applied
+                  every ``hybrid_attn_every`` layers (Zamba2)
+  * ``encdec``  : Whisper-style encoder-decoder (frontend stubbed)
+  * ``encoder`` : classifier (DeiT-Tiny for the paper's Table III)
+
+Layers are stacked with ``jax.lax.scan`` over stacked param pytrees so HLO
+size stays O(1) in depth; per-layer heterogeneity (gemma local/global
+alternation, MoE interleave) is handled by scanned flag arrays or by
+super-layers of ``moe_every`` sublayers.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core import sharding as shd
+from ..core.mx_dot import mx_dot
+from ..core.policy import QuantPolicy
+from . import blocks as blk
+from . import ssd
+
+NO_WINDOW = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _sublayer_init(key, cfg: ModelConfig, is_moe: bool):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": blk.rmsnorm_init(cfg.d_model),
+        "attn": blk.attn_init(ks[0], cfg),
+        "ln2": blk.rmsnorm_init(cfg.d_model),
+        "ffn": blk.moe_init(ks[1], cfg) if is_moe else blk.mlp_init(ks[1], cfg),
+    }
+    if cfg.post_norms:
+        p["pn1"] = blk.rmsnorm_init(cfg.d_model)
+        p["pn2"] = blk.rmsnorm_init(cfg.d_model)
+    return p
+
+
+def _super_init(key, cfg: ModelConfig):
+    """One scanned super-layer = ``moe_every`` sublayers (last one MoE)."""
+    subs = {}
+    for j in range(cfg.moe_every):
+        is_moe = cfg.n_experts > 0 and j == cfg.moe_every - 1
+        subs[f"sub{j}"] = _sublayer_init(jax.random.fold_in(key, j), cfg, is_moe)
+    return subs
+
+
+def _embed_init(key, cfg: ModelConfig):
+    return jax.random.normal(key, (cfg.padded_vocab, cfg.d_model),
+                             jnp.float32) * 0.02
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    params = {"final_norm": blk.rmsnorm_init(cfg.d_model)}
+
+    if cfg.family == "encoder":
+        n = cfg.n_layers
+        params["pos"] = jax.random.normal(ks[1], (cfg.frontend_tokens + 1,
+                                                  cfg.d_model), jnp.float32) * 0.02
+        params["cls"] = jnp.zeros((1, 1, cfg.d_model), jnp.float32)
+        params["layers"] = jax.vmap(
+            lambda k: _sublayer_init(k, cfg, False))(jax.random.split(ks[0], n))
+        params["head"] = jax.random.normal(ks[2], (cfg.d_model, cfg.n_classes),
+                                           jnp.float32) * 0.02
+        return params
+
+    params["emb"] = _embed_init(ks[0], cfg)
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(ks[1], (cfg.d_model, cfg.padded_vocab),
+                                           jnp.float32) * 0.02
+
+    if cfg.family == "decoder":
+        n_super = cfg.n_layers // cfg.moe_every
+        params["layers"] = jax.vmap(
+            lambda k: _super_init(k, cfg))(jax.random.split(ks[2], n_super))
+    elif cfg.family == "ssm":
+        params["layers"] = jax.vmap(
+            lambda k: _layer_ssm_init(k, cfg))(jax.random.split(ks[2], cfg.n_layers))
+    elif cfg.family == "hybrid":
+        n_groups, per, tail = _hybrid_split(cfg)
+        params["layers"] = jax.vmap(lambda k: jax.vmap(
+            lambda k2: _layer_ssm_init(k2, cfg))(jax.random.split(k, per)))(
+            jax.random.split(ks[2], n_groups))
+        if tail:
+            params["tail"] = jax.vmap(
+                lambda k: _layer_ssm_init(k, cfg))(jax.random.split(ks[3], tail))
+        params["shared"] = _sublayer_init(ks[4], cfg, False)  # ONE set of weights
+    elif cfg.family == "encdec":
+        params["enc_layers"] = jax.vmap(
+            lambda k: _sublayer_init(k, cfg, False))(
+            jax.random.split(ks[2], cfg.n_enc_layers))
+        params["dec_layers"] = jax.vmap(
+            lambda k: _declayer_init(k, cfg))(jax.random.split(ks[3], cfg.n_layers))
+        params["enc_norm"] = blk.rmsnorm_init(cfg.d_model)
+    return params
+
+
+def _layer_ssm_init(key, cfg):
+    return {"ln": blk.rmsnorm_init(cfg.d_model), "ssd": ssd.ssd_init(key, cfg)}
+
+
+def _declayer_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": blk.rmsnorm_init(cfg.d_model),
+        "self": blk.attn_init(ks[0], cfg),
+        "ln2": blk.rmsnorm_init(cfg.d_model),
+        "cross": blk.attn_init(ks[1], cfg),
+        "ln3": blk.rmsnorm_init(cfg.d_model),
+        "mlp": blk.mlp_init(ks[2], cfg),
+    }
+
+
+def _hybrid_split(cfg: ModelConfig):
+    per = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // per
+    tail = cfg.n_layers - n_groups * per
+    return n_groups, per, tail
+
+
+def _layer_windows(cfg: ModelConfig, n: int) -> jnp.ndarray:
+    """Per-layer effective SWA window (NO_WINDOW = global attention)."""
+    if cfg.swa_pattern == "all":
+        return jnp.full((n,), cfg.swa_window, jnp.int32)
+    if cfg.swa_pattern == "alternate":
+        return jnp.where(jnp.arange(n) % 2 == 0, cfg.swa_window, NO_WINDOW)
+    return jnp.full((n,), NO_WINDOW, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# sublayer application
+# ---------------------------------------------------------------------------
+
+def _apply_ffn(p, x, cfg: ModelConfig, policy, is_moe: bool):
+    if not is_moe:
+        return blk.mlp(p, x, cfg, policy)
+    if x.shape[1] == 1:  # decode: route across the batch instead of the row
+        y = blk.moe(p, x.transpose(1, 0, 2), cfg, policy)
+        return y.transpose(1, 0, 2)
+    return blk.moe(p, x, cfg, policy)
+
+
+def _apply_sublayer(p, x, cfg, policy, *, positions, window, is_moe,
+                    cache=None, cache_pos=None, causal=True):
+    h = blk.rmsnorm(p["ln1"], x)
+    a, new_cache = blk.attention(p["attn"], h, cfg, policy,
+                                 positions=positions, causal=causal,
+                                 window=window, cache=cache,
+                                 cache_pos=cache_pos)
+    if cfg.post_norms:
+        a = blk.rmsnorm(p["pn1"], a)
+    x = x + a
+    h = blk.rmsnorm(p["ln2"], x)
+    f = _apply_ffn(p["ffn"], h, cfg, policy, is_moe)
+    if cfg.post_norms:
+        f = blk.rmsnorm(p["pn2"], f)
+    return shd.constrain(x + f, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill logits)
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params, batch, cfg: ModelConfig):
+    x = params["emb"][batch["tokens"]]
+    if cfg.name.startswith("gemma2"):
+        x = x * math.sqrt(cfg.d_model)
+    if "embeds" in batch and cfg.frontend_tokens:
+        x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
+    return shd.constrain(x.astype(jnp.dtype(cfg.compute_dtype)),
+                         "batch", None, None)
+
+
+def _lm_head(params, x, cfg: ModelConfig, policy):
+    x = blk.rmsnorm(params["final_norm"], x)
+    w = params["emb"].T if cfg.tie_embeddings else params["head"]
+    logits = blk.dense(x, w, policy).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def forward(params, batch, cfg: ModelConfig, policy: QuantPolicy,
+            remat: str = "none"):
+    """Full-sequence logits for training or prefill."""
+    if cfg.family == "encoder":
+        return _encoder_forward(params, batch, cfg, policy, remat)
+    x = forward_hidden(params, batch, cfg, policy, remat)
+    return _lm_head(params, x, cfg, policy)
+
+
+def forward_hidden(params, batch, cfg: ModelConfig, policy: QuantPolicy,
+                   remat: str = "none"):
+    """Pre-head hidden states (B, S, d) — the chunked-loss entry point."""
+    if cfg.family == "encdec":
+        return _encdec_forward(params, batch, cfg, policy, remat)
+
+    x = _embed_tokens(params, batch, cfg)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    if cfg.family == "decoder":
+        n_super = cfg.n_layers // cfg.moe_every
+        windows = _layer_windows(cfg, cfg.n_layers).reshape(n_super,
+                                                            cfg.moe_every)
+
+        def body(x, inp):
+            lp, win = inp
+            for j in range(cfg.moe_every):
+                is_moe = cfg.n_experts > 0 and j == cfg.moe_every - 1
+                x, _ = _apply_sublayer(lp[f"sub{j}"], x, cfg, policy,
+                                       positions=positions, window=win[j],
+                                       is_moe=is_moe)
+            return x, None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, remat), x,
+                            (params["layers"], windows))
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            x = x + ssd.ssd_forward(lp["ssd"], blk.rmsnorm(lp["ln"], x),
+                                    cfg, policy)
+            return x, None
+        x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["layers"])
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(params, x, positions, cfg, policy, remat)
+    else:
+        raise ValueError(cfg.family)
+    return x
+
+
+def _hybrid_forward(params, x, positions, cfg, policy, remat):
+    def ssm_body(x, lp):
+        x = x + ssd.ssd_forward(lp["ssd"], blk.rmsnorm(lp["ln"], x), cfg, policy)
+        return x, None
+
+    def group_body(x, glp):
+        x, _ = jax.lax.scan(ssm_body, x, glp)
+        x, _ = _apply_sublayer(params["shared"], x, cfg, policy,
+                               positions=positions, window=NO_WINDOW,
+                               is_moe=False)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(group_body, remat), x, params["layers"])
+    if "tail" in params:
+        x, _ = jax.lax.scan(_maybe_remat(ssm_body, remat), x, params["tail"])
+    return x
+
+
+def _encoder_forward(params, batch, cfg, policy, remat):
+    x = batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+    B = x.shape[0]
+    cls = jnp.broadcast_to(params["cls"].astype(x.dtype), (B, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :], x.shape[:2])
+
+    def body(x, lp):
+        x, _ = _apply_sublayer(lp, x, cfg, policy, positions=positions,
+                               window=NO_WINDOW, is_moe=False, causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["layers"])
+    x = blk.rmsnorm(params["final_norm"], x)
+    return blk.dense(x[:, 0], params["head"], policy).astype(jnp.float32)
+
+
+def _sinusoid_pos(S, d, offset=0):
+    pos = jnp.arange(offset, offset + S, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def encode(params, frames, cfg: ModelConfig, policy, remat="none"):
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    B, S, _ = x.shape
+    x = x + _sinusoid_pos(S, cfg.d_model).astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(x, lp):
+        x, _ = _apply_sublayer(lp, x, cfg, policy, positions=positions,
+                               window=NO_WINDOW, is_moe=False, causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["enc_layers"])
+    return blk.rmsnorm(params["enc_norm"], x)
+
+
+def _encdec_forward(params, batch, cfg, policy, remat):
+    enc = encode(params, batch["frames"], cfg, policy, remat)
+    x = params["emb"][batch["tokens"]].astype(jnp.dtype(cfg.compute_dtype))
+    B, S, _ = x.shape
+    x = x + _sinusoid_pos(S, cfg.d_model).astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(x, lp):
+        h = blk.rmsnorm(lp["ln1"], x)
+        a, _ = blk.attention(lp["self"], h, cfg, policy, positions=positions,
+                             causal=True)
+        x = x + a
+        h = blk.rmsnorm(lp["ln2"], x)
+        c, _ = blk.attention(lp["cross"], h, cfg, policy, positions=positions,
+                             kv_x=enc, causal=False)
+        x = x + c
+        x = x + blk.mlp(lp["mlp"], blk.rmsnorm(lp["ln3"], x), cfg, policy)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["dec_layers"])
+    return x

@@ -1,0 +1,75 @@
+"""MXSF-compressed data-parallel gradient reduction (beyond-paper).
+
+The paper's format is a natural wire format for DP gradient all-reduce:
+quantize the local shard to MXSF (8 bits + E8M0/block ~ 8.25 bits/elem vs 32),
+reduce, dequantize.  On real hardware the payload shrinks ~3.9x; in this JAX
+emulation the psum itself runs on dequantized values (XLA has no 8-bit
+all-reduce), so the *numerics* of the compressed collective are exact while
+the traffic saving is modeled (``wire_bytes``).
+
+Two entry points:
+  * ``compressed_psum(x, axis)``       — inside shard_map
+  * ``make_compressed_allreduce(mesh)`` — whole-gradient-tree reduction demo
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core import blocking as B
+
+__all__ = ["compressed_psum", "make_compressed_allreduce", "wire_bytes"]
+
+
+def compressed_psum(x: jax.Array, axis: str, fmt: str = "mxsf",
+                    block: int = 64):
+    """psum with an 8-bit MX wire format: quantize-per-shard, reduce.
+
+    Error model matches the hardware: each rank contributes a quantized
+    shard; the reduction itself is exact (the accelerator reduces in FP12+).
+    """
+    if x.ndim == 0 or x.shape[-1] < 2:
+        return jax.lax.psum(x, axis)
+    xq = B.qdq(x, fmt, (block,))
+    return jax.lax.psum(xq, axis)
+
+
+def wire_bytes(x: jax.Array, fmt: str = "mxsf", block: int = 64) -> int:
+    """Modeled on-wire payload for one shard (vs 4*size for f32 psum)."""
+    if fmt == "none":
+        return x.size * x.dtype.itemsize
+    return x.size + -(-x.size // block)  # 1B codes + 1B scale per block
+
+
+def make_compressed_allreduce(mesh, axis: str = "data", fmt: str = "mxsf",
+                              block: int = 64):
+    """Returns reduce(tree) -> (tree, stats) doing MXSF-compressed mean over
+    ``axis`` via shard_map (the DP gradient aggregation path)."""
+
+    def _reduce_leaf(g):
+        n = mesh.shape[axis]
+
+        @partial(jax.shard_map, mesh=mesh, in_specs=P(axis),
+                 out_specs=P(axis))
+        def _psum_shards(gs):
+            return compressed_psum(gs, axis, fmt, block) / n
+
+        flat = g.reshape(-1)
+        pad = (-flat.size) % n
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return _psum_shards(flat)[: g.size].reshape(g.shape)
+
+    def reduce_tree(grads):
+        out = jax.tree.map(_reduce_leaf, grads)
+        stats = {
+            "wire_bytes_compressed": sum(wire_bytes(g, fmt, block)
+                                         for g in jax.tree.leaves(grads)),
+            "wire_bytes_f32": sum(4 * g.size for g in jax.tree.leaves(grads)),
+        }
+        return out, stats
+
+    return reduce_tree

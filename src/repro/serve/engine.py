@@ -1,0 +1,130 @@
+"""Continuous-batching serving engine (vLLM-style slot manager, CPU-scale).
+
+A fixed pool of batch slots shares one jitted ``decode_step`` compiled for
+static shapes; each slot carries its OWN position (decode_step accepts a
+(B,) position vector — per-sequence cache columns and rope phases). Finished
+requests free their slot; queued prompts prefill into it token-by-token
+while other slots keep decoding. Idle/stale slots are harmless: a slot's
+cache rows are only ever read by its own attention, and its next real step
+overwrites the column before reading it.
+
+Scope: attention-cache families (``decoder``). SSM/hybrid recurrent state
+advances unconditionally per step, so continuous batching for those needs
+per-slot state checkpointing — documented as future work.
+
+Tested against sequential generation in tests/test_serve_engine.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.policy import QuantPolicy
+from ..models import model as M
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Fixed-slot continuous batching over decode_step."""
+
+    def __init__(self, cfg: ModelConfig, params, policy: QuantPolicy,
+                 slots: int = 4, max_len: int = 256,
+                 sampler: Optional[Callable] = None):
+        if cfg.family != "decoder":
+            raise NotImplementedError(
+                "continuous batching needs per-slot recurrent-state "
+                "checkpointing for SSM/hybrid families")
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy
+        self.slots = slots
+        self.max_len = max_len
+        self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
+        self.cache = M.init_cache(cfg, slots, max_len, ring=False,
+                                  kv_fmt=policy.kv_cache_fmt)
+        self.pos = np.zeros(slots, np.int32)
+        self.live: List[Optional[Request]] = [None] * slots
+        self.pending_prompt: List[List[int]] = [[] for _ in range(slots)]
+        self.queue: List[Request] = []
+        self.last_tok = np.zeros(slots, np.int32)
+        self._decode = jax.jit(
+            lambda p, t, c, pos: M.decode_step(p, t, c, pos, cfg, policy))
+        self._uid = 0
+        self.ticks = 0
+
+    def submit(self, prompt: List[int], max_new: int) -> Request:
+        self._uid += 1
+        req = Request(self._uid, list(prompt), max_new)
+        self.queue.append(req)
+        return req
+
+    def run(self, max_ticks: int = 100_000) -> List[Request]:
+        finished: List[Request] = []
+        while self.queue or any(self.live):
+            self._admit()
+            finished.extend(self._tick())
+            self.ticks += 1
+            if self.ticks >= max_ticks:
+                break
+        return finished
+
+    # -- internals --------------------------------------------------------
+    def _admit(self):
+        for s in range(self.slots):
+            if self.live[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.live[s] = req
+                self.pos[s] = 0
+                self.pending_prompt[s] = list(req.prompt)
+
+    def _tick(self) -> List[Request]:
+        """One batched step: every slot consumes either its next prompt
+        token (prefill phase) or its last sampled token (decode phase)."""
+        toks = np.array(self.last_tok)
+        prefilling = np.zeros(self.slots, bool)
+        for s in range(self.slots):
+            if self.live[s] is not None and self.pending_prompt[s]:
+                toks[s] = self.pending_prompt[s].pop(0)
+                prefilling[s] = True
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks)[:, None].astype(jnp.int32),
+            self.cache, jnp.asarray(self.pos))
+        nxt = np.asarray(self.sampler(logits))
+
+        done = []
+        for s in range(self.slots):
+            req = self.live[s]
+            if req is None:
+                continue  # idle slot: pos unchanged, column rewritten later
+            self.pos[s] += 1
+            if prefilling[s]:
+                self.last_tok[s] = (self.pending_prompt[s][0]
+                                    if self.pending_prompt[s] else int(nxt[s]))
+                if not self.pending_prompt[s]:
+                    # prompt fully consumed; nxt is the first generated token
+                    req.out.append(int(nxt[s]))
+                    self.last_tok[s] = int(nxt[s])
+            else:
+                req.out.append(int(nxt[s]))
+                self.last_tok[s] = int(nxt[s])
+            if req.out and (len(req.out) >= req.max_new
+                            or self.pos[s] >= self.max_len):
+                req.done = True
+                done.append(req)
+                self.live[s] = None
+        return done

@@ -1,0 +1,173 @@
+"""Loss + train_step factory: remat, microbatch grad accumulation, AdamW,
+optional MXSF gradient compression on the accumulator (beyond-paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core import blocking as B
+from ..core.policy import QuantPolicy
+from ..models import model as M
+from ..optim import adamw
+
+__all__ = ["TrainConfig", "loss_fn", "make_train_step", "init_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    remat: str = "dots"            # 'none' | 'dots' | 'full'
+    microbatches: int = 1          # gradient accumulation
+    moe_aux_weight: float = 0.01
+    grad_compress: Optional[str] = None  # e.g. 'mxsf' — quantize accumulated grads
+    grad_compress_block: int = 64
+    xent_chunk: int = 1024         # sequence-chunked loss: never materialize
+                                   # full (B, S, V) logits; 0 disables
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def _xent_sums(logits, labels, vocab: int, ignore=-100):
+    """(sum nll, sum mask) in f32.  Padded-vocab columns are masked out."""
+    logits = logits.astype(jnp.float32)
+    if logits.shape[-1] != vocab:
+        dead = jnp.arange(logits.shape[-1]) >= vocab
+        logits = logits + jnp.where(dead, -1e30, 0.0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore).astype(jnp.float32)
+    return jnp.sum(nll * mask), jnp.sum(mask)
+
+
+def _xent(logits, labels, vocab: int, ignore=-100):
+    s, n = _xent_sums(logits, labels, vocab, ignore)
+    return s / jnp.maximum(n, 1.0)
+
+
+def _chunked_lm_loss(params, hidden, labels, cfg: ModelConfig,
+                     policy: QuantPolicy, chunk: int):
+    """Head matmul + xent over sequence chunks — the full (B, S, V) logits
+    tensor never exists (head weights are quantized once per step, not per
+    chunk, would defeat reuse; chunking only splits the activation side)."""
+    from ..models.transformer import _lm_head
+
+    B, S, _ = hidden.shape
+    if chunk <= 0 or S <= chunk or S % chunk:
+        logits = _lm_head(params, hidden, cfg, policy)
+        return _xent(logits, labels, cfg.vocab)
+    n = S // chunk
+    hs = hidden.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        h, lab = xs
+        s, m = _xent_sums(_lm_head(params, h, cfg, policy), lab, cfg.vocab)
+        return (carry[0] + s, carry[1] + m), None
+
+    (s, m), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                             (hs, ls))
+    return s / jnp.maximum(m, 1.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, policy: QuantPolicy,
+            tcfg: TrainConfig):
+    if cfg.family == "encoder":
+        logits = M.forward(params, batch, cfg, policy, remat=tcfg.remat)
+        onehot = jax.nn.one_hot(batch["label"], cfg.n_classes)
+        loss = -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["label"]))
+        return loss, {"loss": loss, "acc": acc}
+    from ..models.transformer import forward_hidden
+
+    hidden = forward_hidden(params, batch, cfg, policy, remat=tcfg.remat)
+    if cfg.frontend_tokens and "embeds" in batch:
+        hidden = hidden[:, cfg.frontend_tokens:]  # loss over text positions
+    loss = _chunked_lm_loss(params, hidden, batch["labels"], cfg, policy,
+                            tcfg.xent_chunk)
+    return loss, {"loss": loss}
+
+
+def _compress_grads(grads, tcfg: TrainConfig):
+    """Quantize gradients to an MX format (emulates 8-bit DP all-reduce wire
+    format — see runtime/compress.py for the shard_map collective demo)."""
+    if not tcfg.grad_compress:
+        return grads
+    blk = (tcfg.grad_compress_block,)
+
+    def q(g):
+        if g.ndim == 0 or g.shape[-1] < 2:
+            return g
+        return B.qdq(g, tcfg.grad_compress, blk)
+
+    return jax.tree.map(q, grads)
+
+
+def init_state(key, cfg: ModelConfig, ocfg: adamw.OptConfig,
+               param_dtype: str = "float32"):
+    params = M.init_params(key, cfg)
+    if param_dtype != "float32":
+        # bf16 stored/gathered params; f32 masters live in the opt state
+        ocfg = ocfg.replace(master_weights=True)
+        opt = adamw.init_opt_state(params, ocfg)
+        params = jax.tree.map(
+            lambda x: x.astype(jnp.dtype(param_dtype)), params)
+        return {"params": params, "opt": opt}
+    return {"params": params, "opt": adamw.init_opt_state(params, ocfg)}
+
+
+def make_train_step(cfg: ModelConfig, policy: QuantPolicy,
+                    ocfg: adamw.OptConfig, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg, policy, tcfg)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tcfg.microbatches > 1:
+            n = tcfg.microbatches
+
+            def split(x):
+                return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                (loss_a, grads_a) = carry
+                (loss, aux), grads = grads_of(params, mb)
+                grads = _compress_grads(grads, tcfg)
+                return (loss_a + loss,
+                        jax.tree.map(jnp.add, grads_a, grads)), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(acc_body, (0.0, zero), micro)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss_sum / n
+            metrics = {"loss": loss}
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+            grads = _compress_grads(grads, tcfg)
+
+        new_params, new_opt, opt_metrics = adamw.apply_updates(
+            params, grads, state["opt"], ocfg)
+        metrics = dict(metrics, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, policy: QuantPolicy):
+    """Returns serve_step(params, tokens, cache, pos) -> (logits, cache)."""
+
+    def serve_step(params, tokens, cache, pos):
+        return M.decode_step(params, tokens, cache, pos, cfg, policy)
+
+    return serve_step

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests run on the single real CPU device; the 512-device dry-run flag is
+# set ONLY inside launch/dryrun.py and the subprocess-based tests.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

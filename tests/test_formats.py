@@ -1,0 +1,107 @@
+"""Bit-level correctness of every MX element format (paper §III/§IV)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blocking as B
+from repro.core import formats as F
+
+EIGHT_BIT = ["mxsf", "mxfp8_e4m3", "mxfp8_e5m2", "mxfp8_e2m5", "mxfp8_e3m4"]
+
+
+@pytest.mark.parametrize("fmt_name", EIGHT_BIT)
+def test_decode_encode_roundtrip_all_codes(fmt_name):
+    """Every representable code survives decode -> encode (except -0)."""
+    fmt = F.get_format(fmt_name)
+    codes = jnp.arange(256, dtype=jnp.uint8)
+    vals = F.decode_rel(codes, fmt)
+    re = np.asarray(F.encode_rel(vals, fmt))
+    bad = [c for c in range(256)
+           if re[c] != c and not (np.asarray(vals)[c] == 0.0)]
+    assert not bad, f"{fmt_name}: {len(bad)} codes fail roundtrip: {bad[:5]}"
+
+
+@pytest.mark.parametrize("fmt_name", EIGHT_BIT + ["mxint8", "mxfp4_e2m1",
+                                                  "mxfp6_e3m2", "mxfp6_e2m3"])
+def test_quantize_rel_matches_codec(fmt_name):
+    """Value-domain quantizer == decode(encode(x)) bit-exactly."""
+    fmt = F.get_format(fmt_name)
+    rng = np.random.default_rng(0)
+    xa = rng.uniform(-1.999, 1.999, size=4096).astype(np.float32)
+    xa[:16] = [0.0, -0.0, 1.0, -1.0, 1.96875, -1.96875, 2 ** -11, 2 ** -12,
+               2 ** -9, 2 ** -3, 0.25, 0.2187512, 1e-30, -1e-20, 0.124999,
+               1.999]
+    q1 = F.quantize_rel(jnp.asarray(xa), fmt)
+    q2 = F.decode_rel(F.encode_rel(jnp.asarray(xa), fmt), fmt)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+def test_mxsf_regime_boundaries():
+    """Gap < 3 -> E2M5 grid; gap >= 3 -> E3M2 grid with bias 10 (Alg. 1)."""
+    fmt = F.get_format("mxsf")
+    # top of E3M2: 1.75 * 2^-3;  bottom of E2M5: 1.0 * 2^-2
+    for v, expect in [(0.21875, 0.21875), (0.25, 0.25),
+                      (2 ** -9 * 1.75, 2 ** -9 * 1.75),
+                      (2 ** -11, 2 ** -11),       # smallest subnormal
+                      (2 ** -12, 0.0),            # RNE ties to even -> 0
+                      (2 ** -12 * 1.26, 2 ** -11)]:
+        got = float(F.quantize_rel(jnp.float32(v), fmt))
+        assert got == pytest.approx(expect, abs=0), (v, got, expect)
+
+
+def test_mxsf_monotone_and_range():
+    fmt = F.get_format("mxsf")
+    xs = jnp.linspace(-1.999, 1.999, 20001)
+    q = np.asarray(F.quantize_rel(xs, fmt))
+    assert (np.diff(q) >= 0).all()
+    assert q.max() == pytest.approx(1.96875)
+    assert q.min() == pytest.approx(-1.96875)
+
+
+def test_mxsf_dynamic_range_vs_e2m5():
+    """MXSF extends min exponent from -3 (E2M5 normal) down to -9/-11."""
+    mxsf = F.get_format("mxsf")
+    boost = F.get_format("mxfp8_e2m5")
+    tiny = jnp.float32(2 ** -10)
+    assert float(F.quantize_rel(tiny, mxsf)) == pytest.approx(2 ** -10)
+    # BOOST subnormal grid bottom is 2^-7; 2^-10 rounds off the grid
+    assert float(F.quantize_rel(tiny, boost)) != pytest.approx(2 ** -10)
+
+
+def test_decode_rule_matches_hardware_spec():
+    """Paper §V-B: 2nd+3rd MSB == 0 => E3M2, else E2M5."""
+    fmt = F.get_format("mxsf")
+    for code in range(256):
+        v = float(F.decode_rel(jnp.uint8(code), fmt))
+        ee = (code >> 5) & 3
+        if ee == 0:
+            assert abs(v) < 0.25  # E3M2 regime strictly below 2^-2
+        else:
+            assert abs(v) >= 0.25
+
+
+def test_shared_exponent_and_zero_block():
+    x = jnp.zeros((2, 32))
+    qt = B.quantize(x, "mxsf", (32,))
+    assert (np.asarray(B.dequantize(qt)) == 0).all()
+    x = jnp.asarray(np.array([[3.0] + [0.0] * 31]))
+    qt = B.quantize(x, "mxsf", (32,))
+    assert int(qt.scale_e8m0[0, 0]) - 127 == 1  # floor(log2(3)) == 1
+
+
+def test_eq56_error_crossover():
+    """Paper §III-A: INT8 wins only at gap 0; equal at 1; E2M5 wins after."""
+    g = jnp.arange(0, 8).astype(jnp.float32)
+    e_int = np.asarray(F.max_quant_error_bound(g, F.get_format("mxint8")))
+    e_fp = np.asarray(F.max_quant_error_bound(g, F.get_format("mxfp8_e2m5")))
+    assert e_int[0] < e_fp[0]
+    assert e_int[1] == pytest.approx(e_fp[1])
+    assert (e_int[2:] > e_fp[2:]).all()
+
+
+def test_int8_eq1_semantics():
+    """Eq. (1): MXINT8 is fixed-point with 6 fractional bits below S_e."""
+    x = jnp.asarray([[1.0, 63 / 64, 1 / 64, 1 / 128] + [0.0] * 28])
+    q = np.asarray(B.qdq(x, "mxint8", (32,)))[0]
+    assert q[0] == 1.0 and q[1] == 63 / 64 and q[2] == 1 / 64
+    assert q[3] in (0.0, 1 / 64)  # RNE at half step

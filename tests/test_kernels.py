@@ -1,0 +1,83 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(shape, scale_sigma=2.0, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape) * np.exp(
+        rng.standard_normal(shape) * scale_sigma)
+    return jnp.asarray(x.astype(dtype))
+
+
+@pytest.mark.parametrize("shape", [(32, 128), (64, 256), (8, 512), (128, 64)])
+@pytest.mark.parametrize("block", [(1, 32), (1, 64), (8, 8)])
+def test_quant_kernel_bitexact(shape, block):
+    if shape[1] % block[1] or shape[0] % block[0]:
+        pytest.skip("kernel path requires block-divisible shapes")
+    x = _rand(shape)
+    c, s = ops.mxsf_quantize(x, block=block, tm=min(32, shape[0]), tk=128)
+    cr, sr = ref.mxsf_quantize_ref(x, block)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_quant_kernel_dtypes(dtype):
+    x = _rand((32, 128), dtype=np.float32).astype(dtype)
+    c, s = ops.mxsf_quantize(x.astype(jnp.float32), block=(1, 32), tm=32,
+                             tk=128)
+    cr, sr = ref.mxsf_quantize_ref(x.astype(jnp.float32), (1, 32))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+
+
+def test_quant_kernel_bf16_input():
+    x = _rand((32, 128)).astype(jnp.bfloat16)
+    c, s = ops.mxsf_quantize(x.astype(jnp.float32), block=(1, 32), tm=32, tk=128)
+    cr, sr = ref.mxsf_quantize_ref(x.astype(jnp.float32), (1, 32))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+
+
+@pytest.mark.parametrize("mkn", [(32, 128, 128), (64, 256, 128),
+                                 (128, 128, 256)])
+def test_matmul_kernel_1d(mkn):
+    m, k, n = mkn
+    x, w = _rand((m, k), seed=1), _rand((k, n), seed=2)
+    xc, xs = ref.mxsf_quantize_ref(x, (1, 32))
+    wc, ws = ref.mxsf_quantize_ref(w, (32, 1))
+    y = ops.mxsf_matmul(xc, xs, wc, ws, xblk=(1, 32), wblk=(32, 1),
+                        tm=32, tn=128, tk=128)
+    yr = ref.mxsf_matmul_ref(xc, xs, wc, ws, (1, 32), (32, 1))
+    # identical decoded operands; only f32 accumulation order differs
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=np.abs(np.asarray(yr)).max() * 1e-5)
+
+
+def test_matmul_kernel_2d_tiles():
+    x, w = _rand((64, 128), seed=3), _rand((128, 64), seed=4)
+    xc, xs = ref.mxsf_quantize_ref(x, (8, 8))
+    wc, ws = ref.mxsf_quantize_ref(w, (8, 8))
+    y = ops.mxsf_matmul(xc, xs, wc, ws, xblk=(8, 8), wblk=(8, 8),
+                        tm=32, tn=64, tk=64)
+    yr = ref.mxsf_matmul_ref(xc, xs, wc, ws, (8, 8), (8, 8))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=np.abs(np.asarray(yr)).max() * 1e-5)
+
+
+def test_matmul_kernel_vs_f64_truth():
+    """Kernel must be at least as close to f64 ground truth as the ref."""
+    from repro.core import blocking as B
+    x, w = _rand((64, 256), seed=5), _rand((256, 64), seed=6)
+    xc, xs = ref.mxsf_quantize_ref(x, (1, 32))
+    wc, ws = ref.mxsf_quantize_ref(w, (32, 1))
+    y = np.asarray(ops.mxsf_matmul(xc, xs, wc, ws, tm=32, tn=64, tk=128),
+                   np.float64)
+    qx = B.QuantizedTensor(xc, xs, "mxsf", (1, 32), (64, 256), "float32")
+    qw = B.QuantizedTensor(wc, ws, "mxsf", (32, 1), (256, 64), "float32")
+    truth = (np.asarray(B.dequantize(qx), np.float64)
+             @ np.asarray(B.dequantize(qw), np.float64))
+    rel = np.abs(y - truth).max() / np.abs(truth).max()
+    assert rel < 1e-5

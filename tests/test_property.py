@@ -1,0 +1,105 @@
+"""Hypothesis property tests on the format/blocking invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocking as B
+from repro.core import formats as F
+
+FMTS = ["mxsf", "mxfp8_e4m3", "mxfp8_e2m5", "mxint8", "mxfp4_e2m1"]
+
+_LIM = float(np.float32(1e20))
+finite_f32 = st.floats(min_value=-_LIM, max_value=_LIM,
+                       allow_nan=False, allow_infinity=False, width=32)
+
+
+@st.composite
+def small_arrays(draw, max_rows=6, cols=32):
+    rows = draw(st.integers(1, max_rows))
+    data = draw(st.lists(finite_f32, min_size=rows * cols,
+                         max_size=rows * cols))
+    return np.asarray(data, np.float32).reshape(rows, cols)
+
+
+@settings(max_examples=40, deadline=None)
+@given(x=small_arrays(), fmt=st.sampled_from(FMTS))
+def test_qdq_idempotent(x, fmt):
+    """Quantizing an already-quantized tensor is a fixed point."""
+    q1 = np.asarray(B.qdq(jnp.asarray(x), fmt, (32,)))
+    q2 = np.asarray(B.qdq(jnp.asarray(q1), fmt, (32,)))
+    np.testing.assert_array_equal(q1, q2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(x=small_arrays(), fmt=st.sampled_from(FMTS))
+def test_pack_equals_sim(x, fmt):
+    """Packed encode/decode == fused qdq, bit-exactly."""
+    qt = B.quantize(jnp.asarray(x), fmt, (32,))
+    sim = B.qdq(jnp.asarray(x), fmt, (32,))
+    np.testing.assert_array_equal(np.asarray(B.dequantize(qt)),
+                                  np.asarray(sim))
+
+
+@settings(max_examples=40, deadline=None)
+@given(x=small_arrays(), fmt=st.sampled_from(FMTS))
+def test_error_bound_halfulp(x, fmt):
+    """|q(x) - x| <= half ULP at each element's regime (Eq. 5-6)."""
+    xa = jnp.asarray(x)
+    q = np.asarray(B.qdq(xa, fmt, (32,)), np.float64)
+    gaps = np.asarray(B.exponent_gaps(xa, (32,)))
+    bound = np.asarray(
+        F.max_quant_error_bound(jnp.asarray(np.minimum(gaps, 60)),
+                                F.get_format(fmt),
+                                s_e=jnp.asarray(
+                                    gaps * 0 + _block_se(x))), np.float64)
+    # top-of-format clamp (gap == 0 binade) can reach one full ULP
+    bound = np.where(gaps == 0, bound * 2, bound)
+    err = np.abs(q - x.astype(np.float64))
+    ok = err <= bound * (1 + 1e-6) + 1e-30
+    assert ok.all(), (x[~ok][:3], err[~ok][:3], bound[~ok][:3])
+
+
+def _block_se(x):
+    amax = np.abs(x).max(axis=-1, keepdims=True)
+    se = np.where(amax > 0, np.floor(np.log2(np.maximum(amax, 1e-300))), 0)
+    return np.broadcast_to(se, x.shape).astype(np.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["mxsf", "mxfp8_e4m3"]))
+def test_transpose_reuse(seed, fmt):
+    """quantize(x.T) == transpose_qt(quantize(x)) for square 2D tiles."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((16, 24))
+         * np.exp(rng.standard_normal((16, 24)) * 4)).astype(np.float32)
+    qt = B.quantize(jnp.asarray(x), fmt, (8, 8))
+    qt2 = B.quantize(jnp.asarray(x.T), fmt, (8, 8))
+    qtT = B.transpose_qt(qt)
+    np.testing.assert_array_equal(np.asarray(qtT.codes), np.asarray(qt2.codes))
+    np.testing.assert_array_equal(np.asarray(qtT.scale_e8m0),
+                                  np.asarray(qt2.scale_e8m0))
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 17), cols=st.integers(1, 70),
+       fmt=st.sampled_from(["mxsf", "mxint8"]))
+def test_padding_invariance(rows, cols, fmt):
+    """Non-divisible shapes quantize identically to their embedded block."""
+    rng = np.random.default_rng(rows * 100 + cols)
+    x = rng.standard_normal((rows, cols)).astype(np.float32)
+    q = np.asarray(B.qdq(jnp.asarray(x), fmt, (8, 8)))
+    assert q.shape == x.shape
+    big = np.zeros((((rows + 7) // 8) * 8, ((cols + 7) // 8) * 8), np.float32)
+    big[:rows, :cols] = x
+    qb = np.asarray(B.qdq(jnp.asarray(big), fmt, (8, 8)))
+    np.testing.assert_array_equal(q, qb[:rows, :cols])
+
+
+@settings(max_examples=40, deadline=None)
+@given(x=small_arrays(max_rows=2), fmt=st.sampled_from(FMTS))
+def test_sign_symmetry(x, fmt):
+    if fmt == "mxint8":
+        return  # int8 range is asymmetric at the clamp (-128 vs 127)
+    q1 = np.asarray(B.qdq(jnp.asarray(x), fmt, (32,)))
+    q2 = np.asarray(B.qdq(jnp.asarray(-x), fmt, (32,)))
+    np.testing.assert_array_equal(q1, -q2)

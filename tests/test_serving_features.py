@@ -1,0 +1,85 @@
+"""Serving/runtime features: MXSF KV cache, gradient compression in-step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.policy import BF16, MXSF_INFER, QuantPolicy
+from repro.models import model as M
+from repro.optim.adamw import OptConfig
+from repro.train import step as T
+
+
+def test_quantized_kv_cache_decode():
+    """Packed MXSF cache decodes close to the bf16 cache; storage is 1B."""
+    cfg = get_config("qwen2.5-32b").reduced().replace(compute_dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    pol = MXSF_INFER.replace(block_1d=16)
+    polq = pol.replace(kv_cache_fmt="mxsf")
+    c1 = M.init_cache(cfg, B, S, dtype=jnp.float32)
+    c2 = M.init_cache(cfg, B, S, kv_fmt="mxsf")
+    assert c2["k_codes"].dtype == jnp.uint8
+    agree = 0
+    for t in range(S):
+        l1, c1 = M.decode_step(params, toks[:, t:t + 1], c1, jnp.int32(t),
+                               cfg, pol)
+        l2, c2 = M.decode_step(params, toks[:, t:t + 1], c2, jnp.int32(t),
+                               cfg, polq)
+        rel = float(jnp.abs(l1 - l2).max() / (jnp.abs(l1).max() + 1e-9))
+        assert rel < 0.15, (t, rel)
+        agree += int((jnp.argmax(l1, -1) == jnp.argmax(l2, -1)).sum())
+    assert agree >= int(0.9 * B * S)  # top-1 parity
+
+
+def test_quantized_kv_cache_prefill_then_decode():
+    cfg = get_config("h2o-danube-1.8b").reduced().replace(
+        compute_dtype="float32", swa_window=32)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    pol = MXSF_INFER.replace(block_1d=16, kv_cache_fmt="mxsf")
+    cache = M.init_cache(cfg, B, S + 4, ring=False, kv_fmt="mxsf")
+    last, cache = M.prefill(params, {"tokens": toks}, cache, cfg, pol)
+    nxt = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    logits, cache = M.decode_step(params, nxt, cache, jnp.int32(S), cfg, pol)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_grad_compression_in_train_step():
+    cfg = get_config("internvl2-1b").reduced().replace(frontend_tokens=0)
+    ocfg = OptConfig(lr=1e-3, total_steps=10)
+    batch = {"tokens": jnp.ones((4, 32), jnp.int32),
+             "labels": jnp.ones((4, 32), jnp.int32)}
+    losses = {}
+    for name, tc in [("plain", T.TrainConfig(remat="none", xent_chunk=0)),
+                     ("compressed", T.TrainConfig(remat="none", xent_chunk=0,
+                                                  grad_compress="mxsf"))]:
+        state = T.init_state(jax.random.PRNGKey(0), cfg, ocfg)
+        step = T.make_train_step(cfg, BF16, ocfg, tc)
+        for _ in range(3):
+            state, m = step(state, batch)
+        losses[name] = float(m["loss"])
+    # compression is lossy but must not derail optimization
+    assert abs(losses["plain"] - losses["compressed"]) < 0.2, losses
+
+
+def test_master_weights_match_f32_training():
+    """bf16 params + f32 masters track pure-f32 training closely."""
+    cfg = get_config("internvl2-1b").reduced().replace(frontend_tokens=0)
+    batch = {"tokens": jnp.ones((4, 16), jnp.int32),
+             "labels": jnp.ones((4, 16), jnp.int32)}
+    tcfg = T.TrainConfig(remat="none", xent_chunk=0)
+    final = {}
+    for name, dtype in [("f32", "float32"), ("bf16+master", "bfloat16")]:
+        ocfg = OptConfig(lr=1e-3, total_steps=10,
+                         master_weights=(dtype != "float32"))
+        state = T.init_state(jax.random.PRNGKey(0), cfg, ocfg,
+                             param_dtype=dtype)
+        step = T.make_train_step(cfg, BF16, ocfg, tcfg)
+        for _ in range(5):
+            state, m = step(state, batch)
+        final[name] = float(m["loss"])
+    assert abs(final["f32"] - final["bf16+master"]) < 0.05, final
