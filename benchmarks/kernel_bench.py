@@ -36,6 +36,42 @@ def run():
     rel = float(jnp.max(jnp.abs(y - yr)) / (jnp.max(jnp.abs(yr)) + 1e-9))
     emit("kernel_mxsf_matmul_interp", us, f"rel_err_vs_ref={rel:.2e}")
 
+    # ---- fused vs unfused quantize->matmul (activation-side datapath) ----
+    # Unfused: quantizer kernel writes x codes/scales to HBM, matmul kernel
+    # reads them back.  Fused: one kernel reads raw x once and quantizes in
+    # the matmul prologue — codes never touch HBM on the value path.
+    wc, ws = ref.mxsf_quantize_ref(w, (32, 1))
+
+    def unfused(xv):
+        c, s = ops.mxsf_quantize(xv, block=(1, 32))
+        return ops.mxsf_matmul(c, s, wc, ws, xblk=(1, 32), wblk=(32, 1))
+
+    def fused(xv):
+        return ops.mxsf_fused_matmul(xv, wc, ws, xblk=(1, 32), wblk=(32, 1))
+
+    def n_dispatch(fn, *args):
+        return str(jax.make_jaxpr(fn)(*args)).count("pallas_call")
+
+    d_unf, d_fus = n_dispatch(unfused, x), n_dispatch(fused, x)
+    # HBM bytes on the activation side (w codes/scales identical in both):
+    # unfused moves x f32 in + codes/scales out + codes/scales back in
+    xbytes, cbytes, sbytes = M * K * 4, M * K, M * K // 32
+    hbm_unf = xbytes + 2 * (cbytes + sbytes)
+    hbm_fus = xbytes
+    emit("kernel_unfused_qmm_dispatches", 0.0, str(d_unf))
+    emit("kernel_fused_qmm_dispatches", 0.0, str(d_fus))
+    emit("kernel_unfused_qmm_act_hbm_bytes", 0.0, str(hbm_unf))
+    emit("kernel_fused_qmm_act_hbm_bytes", 0.0, str(hbm_fus))
+    assert d_fus < d_unf and hbm_fus < hbm_unf
+    emit("kernel_fused_below_unfused", 0.0,
+         f"dispatches={d_fus}<{d_unf},hbm={hbm_fus}<{hbm_unf}"
+         f"({100 * (1 - hbm_fus / hbm_unf):.0f}%_less_act_traffic)")
+    us_u, yu = time_call(lambda: unfused(x), iters=3)
+    us_f, yf = time_call(lambda: fused(x), iters=3)
+    emit("kernel_unfused_qmm_interp", us_u, "")
+    emit("kernel_fused_qmm_interp", us_f,
+         f"bitexact_vs_unfused={bool(jnp.array_equal(yu, yf))}")
+
     # structural roofline of the dequant-matmul (TPU v5e targets).
     # With a TM x TN output tile resident in VMEM and K streamed, HBM bytes
     # per tile ~ (TM + TN) * K of 1-byte codes (+ scales/32), so

@@ -27,6 +27,18 @@ def _exp2i(e):
     e = jnp.clip(e, -126, 127).astype(jnp.int32)
     return jax.lax.bitcast_convert_type((e + 127) << 23, jnp.float32)
 
+
+def _scale_exp2(x, e):
+    """Exact x * 2^e for integer e in [-252, 252].
+
+    jnp.ldexp builds 2^e from the exponent bitfield, so e = -127 (a block
+    whose amax lands in [2^127, 2^128)) yields 0 and silently zeroes the
+    block; splitting the shift keeps every factor a representable power of
+    two.  Mirrors kernels/common.py::scale_by_exp2."""
+    e = e.astype(jnp.int32)
+    e1 = e // 2
+    return x * _exp2i(e1) * _exp2i(e - e1)
+
 __all__ = [
     "QuantizedTensor",
     "quantize",
@@ -137,7 +149,7 @@ def quantize(x: jax.Array, fmt_name: str, block: Tuple[int, ...]) -> QuantizedTe
     amax = _block_amax(x, block)
     se = F.shared_exponent(amax)
     se_el = _se_per_element(se, block)
-    xa = jnp.ldexp(x, -se_el)  # exact power-of-two scaling, 0 stays 0
+    xa = _scale_exp2(x, -se_el)  # exact power-of-two scaling, 0 stays 0
     codes = F.encode_rel(xa, fmt)
     scale = jnp.clip(se + SCALE_BIAS, 0, 255).astype(jnp.uint8)
     return QuantizedTensor(codes, scale, fmt_name, tuple(block),
@@ -165,7 +177,7 @@ def qdq(x: jax.Array, fmt_name: str, block: Tuple[int, ...]) -> jax.Array:
     amax = _block_amax(xf, block)
     se = F.shared_exponent(amax)
     se_el = _se_per_element(se, block)
-    y = F.quantize_rel(jnp.ldexp(xf, -se_el), fmt) * _exp2i(se_el)
+    y = F.quantize_rel(_scale_exp2(xf, -se_el), fmt) * _exp2i(se_el)
     slices = tuple(slice(0, d) for d in orig_shape)
     return y[slices].astype(orig_dtype)
 

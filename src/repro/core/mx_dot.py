@@ -16,6 +16,20 @@ hardware; packed and value-domain residuals are bit-identical (tested).
 
 A trace-time counter (``quant_pass_count``) reproduces the Fig. 4
 quantization-pass accounting.
+
+Backend dispatch (``policy.backend``):
+
+  * ``'jnp'``    : pure-jnp quantize/dequantize roundtrips (reference).
+  * ``'pallas'`` : the Pallas datapath (``kernels/``).  Weights are packed
+    once by the quantizer kernel and stay uint8 in HBM; activations are
+    quantized *inside* the matmul prologue by the fused quantize->matmul
+    kernel (``kernels/mxsf_fused_matmul.py``), which also emits the packed
+    activation residual for the backward pass.  The backward reuses 2D tiles
+    via ``transpose_qt`` (packed dequant-matmul) and re-quantizes through
+    the kernels in the 1D layout.  Off-TPU the kernels run in
+    ``interpret=True`` mode; forward outputs are bit-identical to the jnp
+    reference whenever K fits one kernel tile (gradients match to f32
+    accumulation tolerance).  Pass accounting is unchanged: 1D=6, 2D=3.
 """
 from __future__ import annotations
 
@@ -84,17 +98,101 @@ def qdq_along(x: jax.Array, fmt: str, policy: QuantPolicy, axis: int = -1):
 
 def _flatten_lead(x):
     lead = x.shape[:-1]
-    return x.reshape(-1, x.shape[-1]), lead
+    # explicit product: reshape(-1, 0) is ill-defined for zero-size dims
+    return x.reshape(math.prod(lead), x.shape[-1]), lead
+
+
+def _pol_blocks(policy: QuantPolicy):
+    """(xblk, wblk) 2D block shapes for the kernel datapath."""
+    if policy.block_mode == "2d":
+        t = (policy.tile, policy.tile)
+        return t, t
+    return (1, policy.block_1d), (policy.block_1d, 1)
+
+
+def _pallas_fwd(policy: QuantPolicy, xm, w, with_residuals: bool):
+    """Fused-kernel forward: pack w once, quantize x inside the matmul."""
+    from ..kernels import ops as K
+    xblk, wblk = _pol_blocks(policy)
+    _tick()  # w quantized (packed) by the quantizer kernel
+    wc, ws = K.mxsf_quantize(w, block=wblk)
+    _tick()  # x quantized on the fly in the fused matmul prologue
+    if with_residuals:
+        y, xc, xs = K.mxsf_fused_matmul(xm, wc, ws, xblk, wblk,
+                                        emit_codes=True)
+        res = (B.QuantizedTensor(xc, xs, policy.fwd_fmt, xblk,
+                                 tuple(xm.shape), str(xm.dtype)),
+               B.QuantizedTensor(wc, ws, policy.fwd_fmt, wblk,
+                                 tuple(w.shape), str(w.dtype)))
+    else:
+        y = K.mxsf_fused_matmul(xm, wc, ws, xblk, wblk, emit_codes=False)
+        res = None
+    y = y[:, : w.shape[-1]].astype(jnp.result_type(xm.dtype, w.dtype))
+    return y, res
+
+
+def _pallas_bwd(policy: QuantPolicy, qtx, qtw, gm):
+    """Kernel-datapath backward for both layouts (see module docstring)."""
+    from ..kernels import ops as K
+    m, k = qtx.shape
+    n = qtw.shape[-1]
+    gm = gm.astype(jnp.float32)
+    if policy.block_mode == "2d":
+        # Fig. 4b: quantize g ONCE as TxT tiles, reuse x/w via transpose_qt
+        blk = (policy.tile, policy.tile)
+        qwT, qxT = B.transpose_qt(qtw), B.transpose_qt(qtx)
+        if policy.quantize_bwd:
+            _tick()
+            gc, gs = K.mxsf_quantize(gm, block=blk)
+            dx = K.mxsf_matmul(gc, gs, qwT.codes, qwT.scale_e8m0, blk, blk)
+            dw = K.mxsf_matmul(qxT.codes, qxT.scale_e8m0, gc, gs, blk, blk)
+        else:
+            dx = K.mxsf_fused_matmul(gm, qwT.codes, qwT.scale_e8m0, blk, blk,
+                                     quantize_lhs=False)
+            dw = K.mxsf_fused_matmul(gm.T, qtx.codes, qtx.scale_e8m0, blk,
+                                     blk, quantize_lhs=False)[:n, :k].T
+        return dx[:m, :k], dw[:k, :n]
+    # Fig. 4a: re-quantize x, w, g along the transposed contraction dims
+    b = policy.block_1d
+    quant_g = policy.quantize_bwd
+    _tick()  # w re-quantized along N
+    wrc, wrs = K.mxsf_quantize(B.dequantize(qtw), block=(1, b))
+    if quant_g:
+        _tick()  # g quantized along N inside the fused prologue
+    dx = K.mxsf_fused_matmul(gm, wrc.T, wrs.T, (1, b), (b, 1),
+                             quantize_lhs=quant_g)
+    _tick()  # x re-quantized along M
+    xrc, xrs = K.mxsf_quantize(B.dequantize(qtx), block=(b, 1))
+    if quant_g:
+        _tick()  # g quantized along M inside the fused prologue
+    dw = K.mxsf_fused_matmul(gm.T, xrc, xrs, (1, b), (b, 1),
+                             quantize_lhs=quant_g)[:n, :k].T
+    return dx[:m, :k], dw
+
+
+def _kernel_shapes_ok(x, w) -> bool:
+    """Zero-sized operands have nothing to quantize; the jnp path already
+    produces the (empty) result, so skip the kernel dispatch."""
+    return (math.prod(x.shape[:-1]) > 0 and x.shape[-1] > 0
+            and w.shape[-1] > 0)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _mx_dot(policy: QuantPolicy, x: jax.Array, w: jax.Array) -> jax.Array:
+    if policy.use_pallas and _kernel_shapes_ok(x, w):
+        # primal-only call (no grad trace): skip the residual emission
+        xm, lead = _flatten_lead(x)
+        y, _ = _pallas_fwd(policy, xm, w, with_residuals=False)
+        return y.reshape(*lead, w.shape[-1])
     y, _ = _mx_dot_fwd(policy, x, w)
     return y
 
 
 def _mx_dot_fwd(policy: QuantPolicy, x, w):
     xm, lead = _flatten_lead(x)
+    if policy.use_pallas and _kernel_shapes_ok(x, w):
+        y, res = _pallas_fwd(policy, xm, w, with_residuals=True)
+        return y.reshape(*lead, w.shape[-1]), (res, lead)
     if policy.block_mode == "2d":
         blk = (policy.tile, policy.tile)
     else:
@@ -123,7 +221,16 @@ def _mx_dot_fwd(policy: QuantPolicy, x, w):
 
 def _mx_dot_bwd(policy: QuantPolicy, carry, g):
     res, lead = carry
-    gm = g.reshape(-1, g.shape[-1])  # (M, N)
+    gm, _ = _flatten_lead(g)  # (M, N)
+
+    # res[0] is a QuantizedTensor (pallas / packed) or array (jnp value
+    # residual); .shape[-1] = K either way, mirroring the forward guard
+    if policy.use_pallas and gm.shape[0] > 0 and gm.shape[1] > 0 \
+            and res[0].shape[-1] > 0:
+        qtx, qtw = res
+        dx, dw = _pallas_bwd(policy, qtx, qtw, gm)
+        return (dx.reshape(*lead, dx.shape[-1]).astype(g.dtype),
+                dw.astype(g.dtype))
 
     if policy.save_packed:
         qtx, qtw = res

@@ -26,10 +26,27 @@ class QuantPolicy:
     attn_matmuls: bool = True    # quantize QK^T and attn.V operands
     save_packed: bool = True     # store uint8-packed residuals for bwd
     kv_cache_fmt: str = ""       # e.g. 'mxsf': 8-bit packed KV cache (serving)
+    backend: str = "jnp"         # 'jnp' | 'pallas': mx_dot matmul datapath
 
     @property
     def enabled(self) -> bool:
         return self.block_mode != "none"
+
+    @property
+    def use_pallas(self) -> bool:
+        """True when mx_dot should route through the Pallas kernels
+        (fused quantize->matmul + packed dequant-matmul, see kernels/)."""
+        if self.backend == "jnp" or not self.enabled:
+            return False
+        if self.backend != "pallas":
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             "expected 'jnp' or 'pallas'")
+        if self.fwd_fmt != "mxsf" or (self.quantize_bwd
+                                      and self.bwd_fmt != "mxsf"):
+            raise ValueError("backend='pallas' kernels implement the MXSF "
+                             f"codec only; got fwd_fmt={self.fwd_fmt!r}, "
+                             f"bwd_fmt={self.bwd_fmt!r}")
+        return True
 
     def fwd_block(self, for_matrix: bool = True):
         if self.block_mode == "2d":

@@ -9,19 +9,46 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["flog2", "exp2i", "rne", "decode_mxsf", "encode_mxsf"]
+__all__ = ["flog2", "exp2i", "rne", "scale_by_exp2", "broadcast_block_scale",
+           "decode_mxsf", "encode_mxsf"]
 
 
 def flog2(a: jax.Array) -> jax.Array:
-    """floor(log2(a)) for a >= 0 f32 (normals); -127 for zero/subnormal."""
-    bits = jax.lax.bitcast_convert_type(a.astype(jnp.float32), jnp.int32)
-    return ((bits >> 23) & 0xFF) - 127
+    """floor(log2(a)) for a >= 0 f32, exact down to subnormals; -149-ish
+    for the smallest denormals, -127 for zero.
+
+    Subnormals have a zero exponent field, so the plain bitcast trick reads
+    them as -127; renormalizing by 2^24 first (exact: integer-mantissa shift
+    into the normal range) recovers the true exponent and keeps the kernels
+    bit-identical to the frexp-based ``formats.floor_log2`` reference.
+    """
+    a = a.astype(jnp.float32)
+    sub = (a > 0) & (a < 2.0 ** -126)
+    an = jnp.where(sub, a * jnp.float32(2.0 ** 24), a)
+    bits = jax.lax.bitcast_convert_type(an, jnp.int32)
+    return ((bits >> 23) & 0xFF) - 127 - jnp.where(sub, 24, 0)
 
 
 def exp2i(e: jax.Array) -> jax.Array:
     """Exact 2^e for integer e in [-126, 127]."""
     e = jnp.clip(e, -126, 127).astype(jnp.int32)
     return jax.lax.bitcast_convert_type((e + 127) << 23, jnp.float32)
+
+
+def scale_by_exp2(x: jax.Array, e: jax.Array) -> jax.Array:
+    """x * 2^e for integer e in [-252, 252], split so each factor is a
+    representable power of two (exp2i alone clips outside [-126, 127],
+    which breaks blocks whose shared exponent is +-127-ish)."""
+    e = e.astype(jnp.int32)
+    e1 = e // 2
+    return x * exp2i(e1) * exp2i(e - e1)
+
+
+def broadcast_block_scale(se: jax.Array, bm: int, bk: int, tm: int, tk: int):
+    """Block-grid scale exponents -> per-element (tm, tk) map."""
+    gm, gk = tm // bm, tk // bk
+    se = se.reshape(gm, 1, gk, 1)
+    return jnp.broadcast_to(se, (gm, bm, gk, bk)).reshape(tm, tk)
 
 
 def rne(x: jax.Array) -> jax.Array:
@@ -46,7 +73,9 @@ def decode_mxsf(code: jax.Array) -> jax.Array:
 def encode_mxsf(xa: jax.Array) -> jax.Array:
     """Relative value (|xa| < 2) -> MXSF byte.  Mirrors formats._encode_safe_rel."""
     xa = xa.astype(jnp.float32)
-    s = (xa < 0).astype(jnp.int32)
+    # sign straight from the bit pattern so -0.0 keeps its sign byte
+    # (tiny negatives can underflow to -0.0 in the 2^-S_e scaling)
+    s = (jax.lax.bitcast_convert_type(xa, jnp.int32) >> 31) & 1
     a = jnp.abs(xa)
     e = flog2(a)
 

@@ -19,15 +19,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .common import broadcast_block_scale as _broadcast_scale
 from .common import decode_mxsf, exp2i
 
 SCALE_BIAS = 127
-
-
-def _broadcast_scale(se, bm, bk, tm, tk):
-    gm, gk = tm // bm, tk // bk
-    se = se.reshape(gm, 1, gk, 1)
-    return jnp.broadcast_to(se, (gm, bm, gk, bk)).reshape(tm, tk)
 
 
 def _matmul_kernel(xc_ref, xs_ref, wc_ref, ws_ref, o_ref, acc_ref, *,

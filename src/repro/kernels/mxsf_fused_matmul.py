@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: fused MXSF quantize->matmul (SAFE-MAC prologue fusion).
+
+The paper's energy win comes from keeping operands packed end-to-end and
+decoding inside the MAC array.  The unfused datapath (``mxsf_quantize`` then
+``mxsf_matmul``) still pays one full HBM roundtrip for the activation side:
+codes + scales are written by the quantizer and immediately re-read by the
+matmul.  This kernel folds the MXSF Converter into the matmul prologue:
+
+  * LHS ``x`` arrives *unquantized* (f32/bf16).  Each (TM, TK) tile computes
+    its per-block shared exponents and MXSF byte codes in VMEM, decodes them
+    right back (the SAFE-MAC decode-in-MAC step), and feeds the MXU — the
+    activation codes never touch HBM on the forward value path.
+  * RHS ``w`` arrives *packed* (uint8 codes + E8M0 scales), exactly like
+    ``mxsf_matmul``: weights are quantized once and stay packed in HBM.
+
+Quantize->decode through the byte codec (not a value-domain shortcut) keeps
+the result bit-identical to ``blocking.quantize`` + ``blocking.dequantize``.
+
+Two static switches cover the training datapath:
+
+  * ``emit_codes``: additionally write the LHS codes + scales (the packed
+    residual the custom-VJP backward needs).  The codes blocks are indexed
+    by (i, kk), so they are rewritten (with identical values) once per N
+    tile — cheap for N ~ TN; the unfused path's codes *read* in the matmul
+    is what the fusion always removes.
+  * ``quantize_lhs=False``: skip the converter and feed raw f32 (the
+    ``quantize_bwd=False`` gradient path: unquantized g against packed w).
+
+Grid: (M/TM, N/TN, K/TK), K innermost; f32 accumulator in VMEM scratch.
+MX blocks must tile evenly (TM % bm == 0, TK % bk == 0), so tile-local
+shared exponents equal the global block quantization.  With a single K tile
+the accumulation order matches one jnp.matmul bitwise; multiple K tiles
+accumulate tile-by-tile (f32 tolerance).  ``ops.mxsf_fused_matmul`` handles
+padding and crop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import (broadcast_block_scale, decode_mxsf, encode_mxsf, exp2i,
+                     flog2, scale_by_exp2)
+
+SCALE_BIAS = 127
+
+
+def _fused_kernel(x_ref, wc_ref, ws_ref, o_ref, *rest, nk: int, xblk, wblk,
+                  quantize_lhs: bool, emit_codes: bool):
+    if emit_codes:
+        xc_ref, xs_ref, acc_ref = rest
+    else:
+        (acc_ref,) = rest
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    tm, tk = x.shape
+    tk2, tn = wc_ref.shape
+
+    if quantize_lhs:
+        # --- MXSF Converter, fused into the matmul prologue ---------------
+        bm, bk = xblk
+        gm, gk = tm // bm, tk // bk
+        amax = jnp.abs(x).reshape(gm, bm, gk, bk).max(axis=(1, 3))
+        se = jnp.where(amax > 0, flog2(amax), -127)
+        se_el = broadcast_block_scale(se, bm, bk, tm, tk)
+        codes = encode_mxsf(scale_by_exp2(x, -se_el))
+        # decode-in-MAC: reconstruct through the byte codec so the operand
+        # is bit-identical to the packed reference path
+        xv = decode_mxsf(codes) * exp2i(se_el)
+        if emit_codes:
+            # The (i, kk) codes block changes every inner (K) step, so it is
+            # written back on every visit — including the revisits at j > 0,
+            # which rewrite identical values (N/TN-fold write amplification
+            # of the 1-byte residual on TPU).  Gating on j == 0 would be
+            # wrong: an unwritten revisited output block writes back
+            # undefined VMEM contents.  Residual-free callers (serving)
+            # should pass emit_codes=False.
+            xc_ref[...] = codes
+            xs_ref[...] = jnp.clip(se + SCALE_BIAS, 0, 255).astype(jnp.uint8)
+    else:
+        xv = x
+
+    wse = ws_ref[...].astype(jnp.int32) - SCALE_BIAS
+    wv = decode_mxsf(wc_ref[...]) * exp2i(
+        broadcast_block_scale(wse, *wblk, tk2, tn))
+    acc_ref[...] += jnp.dot(xv, wv, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("xblk", "wblk", "tm", "tn", "tk",
+                                             "quantize_lhs", "emit_codes",
+                                             "interpret"))
+def mxsf_fused_matmul_pallas(x, w_codes, w_scales, *,
+                             xblk=(1, 32), wblk=(32, 1),
+                             tm: int = 256, tn: int = 256, tk: int = 512,
+                             quantize_lhs: bool = True,
+                             emit_codes: bool = False,
+                             interpret: bool = False):
+    """Unquantized (M,K) x @ packed (K,N) w -> f32 (M,N).
+
+    Returns ``y`` or, with ``emit_codes``, ``(y, x_codes, x_scales)``.
+    Shapes must be tile multiples; ``ops.mxsf_fused_matmul`` pads/crops.
+    """
+    m, k = x.shape
+    k2, n = w_codes.shape
+    assert k == k2, (k, k2)
+    assert quantize_lhs or not emit_codes, "emit_codes requires quantize_lhs"
+    tm, tn, tk = min(tm, m), min(tn, n), min(tk, k)
+    assert m % tm == 0 and n % tn == 0 and k % tk == 0, (m, n, k, tm, tn, tk)
+    assert tm % xblk[0] == 0 and tk % xblk[1] == 0, (xblk, tm, tk)
+    assert tk % wblk[0] == 0 and tn % wblk[1] == 0, (wblk, tk, tn)
+    nk = k // tk
+    kernel = functools.partial(_fused_kernel, nk=nk, xblk=xblk, wblk=wblk,
+                               quantize_lhs=quantize_lhs,
+                               emit_codes=emit_codes)
+    out_shape = [jax.ShapeDtypeStruct((m, n), jnp.float32)]
+    out_specs = [pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j))]
+    if emit_codes:
+        out_shape += [
+            jax.ShapeDtypeStruct((m, k), jnp.uint8),
+            jax.ShapeDtypeStruct((m // xblk[0], k // xblk[1]), jnp.uint8),
+        ]
+        out_specs += [
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tm // xblk[0], tk // xblk[1]),
+                         lambda i, j, kk: (i, kk)),
+        ]
+    out = pl.pallas_call(
+        kernel,
+        grid=(m // tm, n // tn, nk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tk // wblk[0], tn // wblk[1]),
+                         lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_codes, w_scales)
+    return tuple(out) if emit_codes else out[0]

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import encode_mxsf, exp2i, flog2
+from .common import encode_mxsf, flog2, scale_by_exp2
 
 SCALE_BIAS = 127
 
@@ -32,7 +32,7 @@ def _quant_kernel(x_ref, codes_ref, scale_ref, *, bm: int, bk: int):
     se = jnp.where(amax > 0, flog2(amax), -127)
     # scale each element by 2^-S_e and encode
     se_el = jnp.broadcast_to(se[:, None, :, None], (gm, bm, gk, bk)).reshape(tm, tk)
-    xa = x * exp2i(-se_el)
+    xa = scale_by_exp2(x, -se_el)  # exact even for |S_e| > 126 (subnormal amax)
     codes_ref[...] = encode_mxsf(xa)
     scale_ref[...] = jnp.clip(se + SCALE_BIAS, 0, 255).astype(jnp.uint8)
 

@@ -4,6 +4,11 @@ Handles padding to tile multiples and backend dispatch: on TPU the kernels
 run compiled; everywhere else they run in ``interpret=True`` mode (Python
 emulation of the kernel body), which is how this CPU container validates
 them.
+
+Padding is always with zeros: zero elements never raise a block amax, zero
+codes decode to exactly 0.0, and adding 0.0 terms to an f32 accumulation is
+the identity — so the padded kernels match the block-padded jnp reference
+bitwise on the cropped region.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ import jax.numpy as jnp
 
 from .mx_matmul import mxsf_matmul_pallas
 from .mxsf_attention import mxsf_flash_attention
+from .mxsf_fused_matmul import mxsf_fused_matmul_pallas
 from .mxsf_quant import mxsf_quantize_pallas
 
 
@@ -21,37 +27,103 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pad2d(x, mult_m, mult_k):
+def _ceil_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _tile_for(dim: int, tile: int, block: int):
+    """Effective tile edge and padded dim: the tile shrinks to the
+    block-padded dim for small inputs, the dim pads up to a tile multiple."""
+    t = min(tile, _ceil_to(dim, block))
+    assert t % block == 0, (dim, tile, block)
+    return t, _ceil_to(dim, t)
+
+
+def _pad2d(x, m_to, k_to, fill=0):
     m, k = x.shape
-    pm, pk = (-m) % mult_m, (-k) % mult_k
-    if pm or pk:
-        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if m_to > m or k_to > k:
+        x = jnp.pad(x, ((0, m_to - m), (0, k_to - k)),
+                    constant_values=fill)
     return x
 
 
 def mxsf_quantize(x: jax.Array, block=(1, 32), tm: int = 256, tk: int = 512):
-    """MXSF-quantize a 2D array via the Pallas kernel; crops padding."""
+    """MXSF-quantize a 2D array via the Pallas kernel.
+
+    Returns ``(codes, scales)`` cropped to the *block-padded* shape — the
+    same shape ``blocking.quantize`` produces, so the outputs drop straight
+    into a ``QuantizedTensor``.
+    """
     m, k = x.shape
     bm, bk = block
-    tm_eff = min(tm, max(bm, 8))  # never below a block / sublane
-    xp = _pad2d(x, max(tm, bm), max(tk, bk))
-    mp, kp = xp.shape
-    tm = min(tm, mp)
-    tk = min(tk, kp)
-    codes, scales = mxsf_quantize_pallas(xp, block=tuple(block), tm=tm, tk=tk,
+    tm, mp = _tile_for(m, tm, bm)
+    tk, kp = _tile_for(k, tk, bk)
+    codes, scales = mxsf_quantize_pallas(_pad2d(x, mp, kp),
+                                         block=tuple(block), tm=tm, tk=tk,
                                          interpret=_interpret())
-    return codes[:m, :k], scales[: -(-m // bm), : -(-k // bk)]
+    mb, kb = _ceil_to(m, bm), _ceil_to(k, bk)
+    return codes[:mb, :kb], scales[: mb // bm, : kb // bk]
 
 
 def mxsf_matmul(x_codes, x_scales, w_codes, w_scales, xblk=(1, 32),
                 wblk=(32, 1), tm: int = 256, tn: int = 256, tk: int = 256):
     """Packed MXSF (M,K)@(K,N) via the Pallas dequant-matmul kernel.
 
-    Requires tile-aligned shapes (the serving path pads upstream).
+    Accepts block-aligned but non-tile-aligned operands: pads codes/scales
+    with zeros (decode to 0.0) and crops the output back to (M, N).
     """
-    return mxsf_matmul_pallas(x_codes, x_scales, w_codes, w_scales,
-                              xblk=tuple(xblk), wblk=tuple(wblk),
-                              tm=tm, tn=tn, tk=tk, interpret=_interpret())
+    m, k = x_codes.shape
+    k2, n = w_codes.shape
+    assert k == k2, (k, k2)
+    tm, mp = _tile_for(m, tm, xblk[0])
+    tn, np_ = _tile_for(n, tn, wblk[1])
+    kblk = max(xblk[1], wblk[0])
+    assert kblk % xblk[1] == 0 and kblk % wblk[0] == 0, (xblk, wblk)
+    tk, kp = _tile_for(k, tk, kblk)
+    y = mxsf_matmul_pallas(
+        _pad2d(x_codes, mp, kp),
+        _pad2d(x_scales, mp // xblk[0], kp // xblk[1]),
+        _pad2d(w_codes, kp, np_),
+        _pad2d(w_scales, kp // wblk[0], np_ // wblk[1]),
+        xblk=tuple(xblk), wblk=tuple(wblk),
+        tm=tm, tn=tn, tk=tk, interpret=_interpret())
+    return y[:m, :n]
+
+
+def mxsf_fused_matmul(x, w_codes, w_scales, xblk=(1, 32), wblk=(32, 1),
+                      tm: int = 256, tn: int = 256, tk: int = 512,
+                      quantize_lhs: bool = True, emit_codes: bool = False):
+    """Fused quantize->matmul: unquantized x, packed w (see
+    ``mxsf_fused_matmul.py``).
+
+    ``x`` may have fewer K columns than ``w_codes`` has rows (packed weights
+    are block-padded); the gap is zero-filled.  Returns ``y[M, N]`` or, with
+    ``emit_codes``, ``(y, x_codes, x_scales)`` with codes cropped to x's
+    block-padded shape (``QuantizedTensor``-ready).
+    """
+    m, k = x.shape
+    kw, n = w_codes.shape
+    assert kw >= k and kw % wblk[0] == 0, (k, kw, wblk)
+    tm, mp = _tile_for(m, tm, xblk[0])
+    tn, np_ = _tile_for(n, tn, wblk[1])
+    kblk = max(xblk[1], wblk[0])
+    assert kblk % xblk[1] == 0 and kblk % wblk[0] == 0, (xblk, wblk)
+    tk, kp = _tile_for(kw, tk, kblk)
+    # no host-side upcast: the kernel casts per-tile in VMEM, so bf16
+    # activations stream 2 bytes/elem from HBM, not 4
+    out = mxsf_fused_matmul_pallas(
+        _pad2d(x, mp, kp),
+        _pad2d(w_codes, kp, np_),
+        _pad2d(w_scales, kp // wblk[0], np_ // wblk[1]),
+        xblk=tuple(xblk), wblk=tuple(wblk), tm=tm, tn=tn, tk=tk,
+        quantize_lhs=quantize_lhs, emit_codes=emit_codes,
+        interpret=_interpret())
+    if not emit_codes:
+        return out[:m, :n]
+    y, codes, scales = out
+    mb, kb = _ceil_to(m, xblk[0]), _ceil_to(k, xblk[1])
+    return (y[:m, :n], codes[:mb, :kb],
+            scales[: mb // xblk[0], : kb // xblk[1]])
 
 
 def mxsf_attention(q, k_codes, k_scales, v_codes, v_scales, *, causal=True,

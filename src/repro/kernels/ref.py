@@ -22,6 +22,23 @@ def mxsf_matmul_ref(x_codes, x_scales, w_codes, w_scales, xblk, wblk):
                       preferred_element_type=jnp.float32)
 
 
+def mxsf_fused_matmul_ref(x, w_codes, w_scales, xblk=(1, 32), wblk=(32, 1),
+                          quantize_lhs=True):
+    """Oracle for mxsf_fused_matmul_pallas: qdq the raw LHS (bit-identical
+    to packed encode/decode), dequantize the packed RHS, f32 matmul."""
+    m, k = x.shape
+    kw, n = w_codes.shape
+    if kw > k:
+        x = jnp.pad(x, ((0, 0), (0, kw - k)))
+    xv = x.astype(jnp.float32)
+    if quantize_lhs:
+        xv = B.qdq(xv, "mxsf", tuple(xblk))
+    qw = B.QuantizedTensor(w_codes, w_scales, "mxsf", tuple(wblk), (kw, n),
+                           "float32")
+    return jnp.matmul(xv, B.dequantize(qw),
+                      preferred_element_type=jnp.float32)
+
+
 def mxsf_qdq_matmul_ref(x, w, xblk=(1, 32), wblk=(32, 1)):
     """End-to-end oracle: quantize f32 inputs then matmul."""
     xq = B.qdq(x, "mxsf", tuple(xblk))

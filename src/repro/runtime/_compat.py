@@ -1,0 +1,13 @@
+"""jax version compatibility shims shared by the runtime modules."""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6 promotes shard_map to the top-level namespace
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+# pvary only exists under the varying-axis type system of newer jax; older
+# shard_map needs no annotation, so fall back to the identity
+pvary = getattr(jax.lax, "pvary", lambda x, axis: x)

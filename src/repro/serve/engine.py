@@ -44,19 +44,30 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, policy: QuantPolicy,
                  slots: int = 4, max_len: int = 256,
-                 sampler: Optional[Callable] = None):
+                 sampler: Optional[Callable] = None,
+                 backend: Optional[str] = None):
         if cfg.family != "decoder":
             raise NotImplementedError(
                 "continuous batching needs per-slot recurrent-state "
                 "checkpointing for SSM/hybrid families")
+        if backend is not None:
+            # route the linear layers through the Pallas kernel datapath
+            # (fused quantize->matmul, packed weights; see core/mx_dot.py);
+            # validates eagerly so a bad combo fails at engine construction
+            policy = policy.replace(backend=backend)
+            _ = policy.use_pallas
         self.cfg = cfg
         self.params = params
         self.policy = policy
         self.slots = slots
         self.max_len = max_len
         self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
-        self.cache = M.init_cache(cfg, slots, max_len, ring=False,
-                                  kv_fmt=policy.kv_cache_fmt)
+        # cache precision follows the model's compute dtype — init_cache's
+        # bf16 default silently downcast K/V under float32 configs and made
+        # batched decode diverge from the sequential reference
+        self.cache = M.init_cache(cfg, slots, max_len,
+                                  dtype=jnp.dtype(cfg.compute_dtype),
+                                  ring=False, kv_fmt=policy.kv_cache_fmt)
         self.pos = np.zeros(slots, np.int32)
         self.live: List[Optional[Request]] = [None] * slots
         self.pending_prompt: List[List[int]] = [[] for _ in range(slots)]

@@ -1,0 +1,96 @@
+"""Exhaustive MXSF codebook parity: kernel codec == value-domain codec.
+
+The byte codec exists twice — ``kernels/common.py`` (bitcast-based, Pallas
+lowerable) and ``core/formats.py`` (frexp-based reference).  Every one of the
+256 codes must decode identically through both, and encode∘decode must be
+the identity (every representable value is its own fixed point).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocking as B
+from repro.core import formats as F
+from repro.kernels import common as C
+
+ALL_CODES = jnp.arange(256, dtype=jnp.uint8)
+MXSF = F.get_format("mxsf")
+
+
+def _bits(x):
+    return np.asarray(jax.lax.bitcast_convert_type(
+        x.astype(jnp.float32), jnp.int32))
+
+
+def test_all_256_codes_decode_identically():
+    dk = C.decode_mxsf(ALL_CODES)
+    df = F.decode_rel(ALL_CODES, MXSF)
+    # bit-level comparison: also catches -0.0 vs +0.0 (code 0x80)
+    np.testing.assert_array_equal(_bits(dk), _bits(df))
+
+
+def test_decode_values_in_relative_range():
+    v = np.asarray(C.decode_mxsf(ALL_CODES))
+    assert np.isfinite(v).all()
+    assert (np.abs(v) <= MXSF.max_rel).all()
+
+
+def test_encode_decode_is_identity_kernel_codec():
+    np.testing.assert_array_equal(
+        np.asarray(C.encode_mxsf(C.decode_mxsf(ALL_CODES))),
+        np.asarray(ALL_CODES))
+
+
+def test_encode_decode_is_identity_reference_codec():
+    np.testing.assert_array_equal(
+        np.asarray(F.encode_rel(F.decode_rel(ALL_CODES, MXSF), MXSF)),
+        np.asarray(ALL_CODES))
+
+
+def test_cross_codec_roundtrip():
+    """Kernel encode of reference-decoded values (and vice versa)."""
+    np.testing.assert_array_equal(
+        np.asarray(C.encode_mxsf(F.decode_rel(ALL_CODES, MXSF))),
+        np.asarray(ALL_CODES))
+    np.testing.assert_array_equal(
+        np.asarray(F.encode_rel(C.decode_mxsf(ALL_CODES), MXSF)),
+        np.asarray(ALL_CODES))
+
+
+def test_representable_values_are_quantizer_fixed_points():
+    """quantize_rel must leave every decoded codebook value unchanged."""
+    v = F.decode_rel(ALL_CODES, MXSF)
+    np.testing.assert_array_equal(_bits(F.quantize_rel(v, MXSF)), _bits(v))
+
+
+def test_codebook_covers_dual_regimes():
+    """Sanity on the format itself: E2M5 near 1.0, E3M2 below 2^-2."""
+    v = np.abs(np.asarray(C.decode_mxsf(ALL_CODES), np.float64))
+    nz = v[v > 0]
+    # wide regime reaches the paper's max 63/32, narrow regime 2^-11
+    assert np.isclose(nz.max(), 2.0 - 2.0 ** -5)
+    assert np.isclose(nz.min(), 2.0 ** -11)
+    # 128 magnitudes +- sign, minus the duplicated zero
+    assert len(np.unique(v)) == 128
+
+
+def test_packed_and_value_domain_paths_bit_identical():
+    """blocking.quantize->dequantize == blocking.qdq on a hard input mix
+    (zeros, f32 denormals, giant finite blocks) for both layouts."""
+    rng = np.random.default_rng(0)
+    rows = [
+        np.zeros(64, np.float32),
+        np.full(64, 1e-40, np.float32),
+        np.full(64, 3.0e38, np.float32),
+        np.where(np.arange(64) % 3, -(2.0 ** -149), 3.4e38).astype(np.float32),
+        (rng.standard_normal(64) * np.exp(rng.standard_normal(64) * 20)
+         ).astype(np.float32),
+        np.full(64, 2.0 ** -126, np.float32),
+        -np.full(64, 2.0 ** -127, np.float32),
+        (np.linspace(0, 63, 64) * 1e-42).astype(np.float32),
+    ]
+    x = jnp.asarray(np.stack(rows))
+    for block in [(1, 32), (8, 8), (32,)]:
+        qt = B.quantize(x, "mxsf", block)
+        sim = B.qdq(x, "mxsf", block)
+        np.testing.assert_array_equal(_bits(B.dequantize(qt)), _bits(sim))

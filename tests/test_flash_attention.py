@@ -15,7 +15,9 @@ def _packed_kv(BKV, L, dh, seed=0):
     return qk.codes, qk.scale_e8m0[..., 0], qv.codes, qv.scale_e8m0[..., 0]
 
 
-@pytest.mark.parametrize("gqa", [1, 2, 4])
+@pytest.mark.parametrize("gqa", [1,
+                                 pytest.param(2, marks=pytest.mark.slow),
+                                 pytest.param(4, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("causal", [True, False])
 def test_flash_vs_oracle(gqa, causal):
     BKV, L, dh, S = 2, 64, 64, 32

@@ -41,8 +41,11 @@ def test_quant_kernel_bf16_input():
     np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
 
 
-@pytest.mark.parametrize("mkn", [(32, 128, 128), (64, 256, 128),
-                                 (128, 128, 256)])
+@pytest.mark.parametrize("mkn", [(32, 128, 128),
+                                 pytest.param((64, 256, 128),
+                                              marks=pytest.mark.slow),
+                                 pytest.param((128, 128, 256),
+                                              marks=pytest.mark.slow)])
 def test_matmul_kernel_1d(mkn):
     m, k, n = mkn
     x, w = _rand((m, k), seed=1), _rand((k, n), seed=2)
@@ -65,6 +68,65 @@ def test_matmul_kernel_2d_tiles():
     yr = ref.mxsf_matmul_ref(xc, xs, wc, ws, (8, 8), (8, 8))
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                rtol=1e-4, atol=np.abs(np.asarray(yr)).max() * 1e-5)
+
+
+@pytest.mark.parametrize("shape", [(17, 70), (5, 33)])
+@pytest.mark.parametrize("block", [(1, 32), (8, 8)])
+def test_quant_kernel_non_block_aligned(shape, block):
+    """Padding/crop path in ops.py: outputs match the block-padded ref."""
+    x = _rand(shape, seed=7)
+    c, s = ops.mxsf_quantize(x, block=block)
+    cr, sr = ref.mxsf_quantize_ref(x, block)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+def test_quant_kernel_edge_inputs():
+    """Zeros, f32 denormals and huge finite blocks quantize bit-identically
+    (subnormal-exact flog2 + split power-of-two scaling in the kernel)."""
+    rows = [
+        np.zeros(64, np.float32),
+        np.full(64, 1e-40, np.float32),
+        np.full(64, 3.0e38, np.float32),
+        np.where(np.arange(64) % 3, -(2.0 ** -149), 3.4e38).astype(np.float32),
+        np.full(64, 2.0 ** -126, np.float32),
+        (np.linspace(1, 64, 64) * 1e-42).astype(np.float32),
+        np.where(np.arange(64) % 2, 2.0 ** -130, 1.0).astype(np.float32),
+        -np.full(64, 2.0 ** -127, np.float32),
+    ]
+    x = jnp.asarray(np.stack(rows))
+    for block in [(1, 32), (8, 8)]:
+        c, s = ops.mxsf_quantize(x, block=block)
+        cr, sr = ref.mxsf_quantize_ref(x, block)
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+def test_matmul_kernel_non_tile_aligned():
+    """Small tiles force the zero-pad/crop path in ops.mxsf_matmul."""
+    m, k, n = 40, 96, 72  # block-aligned K, tile-misaligned M/N
+    x, w = _rand((m, k), seed=8), _rand((k, n), seed=9)
+    xc, xs = ref.mxsf_quantize_ref(x, (1, 32))
+    wc, ws = ref.mxsf_quantize_ref(w, (32, 1))
+    y = ops.mxsf_matmul(xc, xs, wc, ws, xblk=(1, 32), wblk=(32, 1),
+                        tm=32, tn=64, tk=64)
+    yr = ref.mxsf_matmul_ref(xc, xs, wc, ws, (1, 32), (32, 1))
+    assert y.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=np.abs(np.asarray(yr)).max() * 1e-5)
+
+
+def test_matmul_kernel_non_tile_aligned_2d_tiles():
+    m, k, n = 24, 40, 56  # (8,8)-aligned, misaligned vs 32/64 tiles
+    x, w = _rand((m, k), seed=10), _rand((k, n), seed=11)
+    xc, xs = ref.mxsf_quantize_ref(x, (8, 8))
+    wc, ws = ref.mxsf_quantize_ref(w, (8, 8))
+    y = ops.mxsf_matmul(xc, xs, wc, ws, xblk=(8, 8), wblk=(8, 8),
+                        tm=16, tn=32, tk=32)
+    yr = ref.mxsf_matmul_ref(xc, xs, wc, ws, (8, 8), (8, 8))
+    assert y.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4,
+                               atol=np.abs(np.asarray(yr)).max() * 1e-5)
 
 
 def test_matmul_kernel_vs_f64_truth():

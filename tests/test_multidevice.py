@@ -6,6 +6,9 @@ import sys
 
 import pytest
 
+# subprocess-isolated 8-fake-device runs: minutes of compile time apiece
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

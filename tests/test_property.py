@@ -1,6 +1,9 @@
 """Hypothesis property tests on the format/blocking invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import blocking as B

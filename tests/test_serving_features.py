@@ -11,6 +11,7 @@ from repro.optim.adamw import OptConfig
 from repro.train import step as T
 
 
+@pytest.mark.slow  # interpret-mode packed-KV flash attention, ~2 min
 def test_quantized_kv_cache_decode():
     """Packed MXSF cache decodes close to the bf16 cache; storage is 1B."""
     cfg = get_config("qwen2.5-32b").reduced().replace(compute_dtype="float32")
