@@ -72,6 +72,55 @@ def run():
     emit("kernel_fused_qmm_interp", us_f,
          f"bitexact_vs_unfused={bool(jnp.array_equal(yu, yf))}")
 
+    # ---- packed-KV decode attention: flash kernel vs dequantize+einsum ----
+    # Serving hot path (models/blocks.py::_attend_packed): the kernel reads
+    # the cache as 1-byte MXSF codes and decodes in VMEM; the jnp path
+    # dequantizes the whole cache to f32 values and materializes the
+    # (BH x L) score/probs rows through HBM.
+    BKV, L, dh, g = 2, 512, 64, 2
+    BH = BKV * g
+    q = jnp.asarray(rng.standard_normal((BH, 1, dh)).astype(np.float32))
+    from repro.core import blocking as B
+
+    kv = rng.standard_normal((2, BKV, L, dh)).astype(np.float32)
+    qk = B.quantize(jnp.asarray(kv[0]), "mxsf", (dh,))
+    qv = B.quantize(jnp.asarray(kv[1]), "mxsf", (dh,))
+    kc, ks = qk.codes, qk.scale_e8m0[..., 0]
+    vc, vs = qv.codes, qv.scale_e8m0[..., 0]
+
+    def attn_kernel(qv_):
+        return ops.mxsf_attention(qv_, kc, ks, vc, vs, causal=False,
+                                  kv_len=L, cq=1, ck=256)
+
+    def attn_dequant(qv_):
+        return ref.mxsf_flash_attention_ref(qv_, kc, ks, vc, vs,
+                                            causal=False, kv_len=L)
+
+    d_ker = n_dispatch(attn_kernel, q)
+    d_deq = n_dispatch(attn_dequant, q)
+    # HBM bytes per decoded token, cache side (q/out negligible at S=1):
+    #   kernel : K+V codes at 1 B/elem + one E8M0 scale byte per (pos, head)
+    #   dequant: same code reads + f32 value write + read-back into the
+    #            einsums + (BH x L) f32 scores AND probs written + read
+    cache_codes = 2 * BKV * L * dh
+    cache_scales = 2 * BKV * L
+    hbm_ker = cache_codes + cache_scales
+    hbm_deq = (cache_codes + cache_scales + 2 * 2 * BKV * L * dh * 4
+               + 2 * 2 * BH * L * 4)
+    emit("kernel_attn_packed_dispatches", 0.0, str(d_ker))
+    emit("kernel_attn_dequant_dispatches", 0.0, str(d_deq))
+    emit("kernel_attn_packed_hbm_bytes_per_tok", 0.0, str(hbm_ker))
+    emit("kernel_attn_dequant_hbm_bytes_per_tok", 0.0, str(hbm_deq))
+    assert d_ker == 1 and d_deq == 0 and hbm_ker < hbm_deq
+    us_k, yk = time_call(lambda: attn_kernel(q), iters=3)
+    us_d, yd = time_call(lambda: attn_dequant(q), iters=3)
+    rel = float(jnp.max(jnp.abs(yk - yd)) / (jnp.max(jnp.abs(yd)) + 1e-9))
+    emit("kernel_attn_packed_interp", us_k, f"rel_err_vs_dequant={rel:.2e}")
+    emit("kernel_attn_dequant_interp", us_d, "")
+    emit("kernel_attn_packed_below_dequant", 0.0,
+         f"1_fused_dispatch,hbm={hbm_ker}<{hbm_deq}"
+         f"({hbm_deq / hbm_ker:.1f}x_less_cache_traffic_per_decoded_token)")
+
     # structural roofline of the dequant-matmul (TPU v5e targets).
     # With a TM x TN output tile resident in VMEM and K streamed, HBM bytes
     # per tile ~ (TM + TN) * K of 1-byte codes (+ scales/32), so

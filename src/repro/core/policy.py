@@ -48,6 +48,21 @@ class QuantPolicy:
                              f"bwd_fmt={self.bwd_fmt!r}")
         return True
 
+    @property
+    def use_pallas_attention(self) -> bool:
+        """True when decode attention should consume the packed MXSF KV
+        cache *directly* through the flash-attention kernel
+        (kernels/mxsf_attention.py) instead of dequantize-then-mx_einsum.
+
+        Requires the Pallas backend, a packed MXSF cache, and an
+        inference-mode policy (no gradient quantization: the kernel is
+        forward-only).  Attention quantization blocks stay 1D on this path
+        even under ``block_mode='2d'`` training layouts — same contract as
+        ``mx_einsum``/``qdq_along``.
+        """
+        return (self.use_pallas and self.kv_cache_fmt == "mxsf"
+                and not self.quantize_bwd)
+
     def fwd_block(self, for_matrix: bool = True):
         if self.block_mode == "2d":
             return (self.tile, self.tile)

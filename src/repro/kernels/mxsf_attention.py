@@ -12,6 +12,14 @@ Layout:
   k/v scale: (BKV, L)     uint8    — E8M0 per (position, head) row
 GQA: q row bh maps to kv row bh // group.
 
+Per-row dynamic scalars (SMEM, ``(BH, 1)`` int32 — NOT static, so a cache
+that grows by one position per decode step reuses one compilation):
+  kv_len   : number of valid cache positions for this row (rest masked)
+  q_offset : absolute position of this row's first query; the causal and
+             window masks compare ``kpos`` against ``q_offset + iq`` so a
+             single decoded token at position p passes ``q_offset=p, S=1``
+  window   : SWA width (``kpos > qpos_abs - window``); ``NO_WINDOW`` = off
+
 Grid (BH, S/Cq, L/Ck), L innermost; VMEM scratch carries the online-softmax
 state (m, l, acc) across the L loop.
 """
@@ -29,11 +37,21 @@ from .common import decode_mxsf, exp2i
 
 SCALE_BIAS = 127
 NEG_INF = -1e30
+NO_WINDOW = 1 << 30  # matches models/transformer.py sentinel
+
+# traces of the inner jitted kernel wrapper == XLA compilations; tests
+# assert a growing-cache decode adds exactly one (see trace_count())
+_TRACE_COUNT = 0
 
 
-def _attn_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, o_ref,
-                 m_ref, l_ref, acc_ref, *, nk: int, cq: int, ck: int,
-                 dh: int, causal: bool, kv_len: int):
+def trace_count() -> int:
+    """Number of times the kernel wrapper has been (re)traced/compiled."""
+    return _TRACE_COUNT
+
+
+def _attn_kernel(kvl_ref, off_ref, win_ref, q_ref, kc_ref, ks_ref, vc_ref,
+                 vs_ref, o_ref, m_ref, l_ref, acc_ref, *, nk: int, cq: int,
+                 ck: int, dh: int, causal: bool, cache_layout: bool):
     iq = pl.program_id(1)
     jk = pl.program_id(2)
 
@@ -44,25 +62,37 @@ def _attn_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, o_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0].astype(jnp.float32)                      # (Cq, dh)
-    kse = ks_ref[0].astype(jnp.int32) - SCALE_BIAS        # (Ck,)
-    vse = vs_ref[0].astype(jnp.int32) - SCALE_BIAS
-    k = decode_mxsf(kc_ref[0]) * exp2i(kse)[:, None]      # (Ck, dh)
-    v = decode_mxsf(vc_ref[0]) * exp2i(vse)[:, None]
+    if cache_layout:  # (1, Ck, 1, dh) codes / (1, Ck, 1, 1) scale blocks
+        kc, ks = kc_ref[0, :, 0, :], ks_ref[0, :, 0, 0]
+        vc, vs = vc_ref[0, :, 0, :], vs_ref[0, :, 0, 0]
+    else:             # row layout: (1, Ck, dh) codes / (1, Ck) scales
+        kc, ks = kc_ref[0], ks_ref[0]
+        vc, vs = vc_ref[0], vs_ref[0]
+    kse = ks.astype(jnp.int32) - SCALE_BIAS               # (Ck,)
+    vse = vs.astype(jnp.int32) - SCALE_BIAS
+    k = decode_mxsf(kc) * exp2i(kse)[:, None]             # (Ck, dh)
+    v = decode_mxsf(vc) * exp2i(vse)[:, None]
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
     s = s / math.sqrt(dh)                                  # (Cq, Ck)
-    qpos = iq * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+    kv_len = kvl_ref[0, 0]
+    off = off_ref[0, 0]
+    win = win_ref[0, 0]
+    qpos = off + iq * cq + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
     kpos = jk * ck + jax.lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
     mask = kpos < kv_len
     if causal:
         mask &= kpos <= qpos
+    mask &= kpos > qpos - win
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(axis=-1))
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])
+    # zero p under the mask: a fully-masked tile leaves m_new at NEG_INF,
+    # where exp(s - m_new) = exp(0) = 1 would pull masked V rows into acc/l
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
     l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
     acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
@@ -74,38 +104,56 @@ def _attn_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, o_ref,
         o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "cq", "ck", "kv_len",
+@functools.partial(jax.jit, static_argnames=("causal", "cq", "ck",
                                              "interpret"))
-def mxsf_flash_attention(q, k_codes, k_scales, v_codes, v_scales, *,
-                         causal: bool = True, cq: int = 256, ck: int = 256,
-                         kv_len: int = -1, interpret: bool = False):
-    """Flash attention over MXSF-packed K/V.
-
-    q: (BH, S, dh); k/v codes: (BKV, L, dh) uint8; k/v scales: (BKV, L) uint8.
-    ``kv_len``: number of valid cache positions (rest masked; -1 = all).
-    Returns (BH, S, dh) in q.dtype.
-    """
+def _flash_attention_jit(kv_len, q_offset, window, q, k_codes, k_scales,
+                         v_codes, v_scales, *, causal, cq, ck, interpret):
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
     BH, S, dh = q.shape
-    BKV, L, dh2 = k_codes.shape
-    assert dh == dh2 and BH % BKV == 0
-    g = BH // BKV
-    cq = min(cq, S)
-    ck = min(ck, L)
-    assert S % cq == 0 and L % ck == 0, (S, cq, L, ck)
+    cache_layout = k_codes.ndim == 4
+    if cache_layout:
+        # KV cache pytree layout (models/decoding.py): codes (B, W, kv, dh),
+        # scales (B, W, kv, 1) — the BlockSpec index maps do the
+        # (batch x kv-head)-row adaptation, so the cache buffers feed the
+        # kernel as-is (no transposed HBM copy on the decode hot path)
+        B, L, KV, _ = k_codes.shape
+        h = BH // B
+        g = h // KV
+
+        def kvmap(b, i, j):
+            return (b // h, j, (b % h) // g, 0)
+
+        kv_specs = [
+            pl.BlockSpec((1, ck, 1, dh), kvmap),
+            pl.BlockSpec((1, ck, 1, 1), kvmap),
+            pl.BlockSpec((1, ck, 1, dh), kvmap),
+            pl.BlockSpec((1, ck, 1, 1), kvmap),
+        ]
+    else:
+        BKV, L, _ = k_codes.shape
+        g = BH // BKV
+        kv_specs = [
+            pl.BlockSpec((1, ck, dh), lambda b, i, j, g=g: (b // g, j, 0)),
+            pl.BlockSpec((1, ck), lambda b, i, j, g=g: (b // g, j)),
+            pl.BlockSpec((1, ck, dh), lambda b, i, j, g=g: (b // g, j, 0)),
+            pl.BlockSpec((1, ck), lambda b, i, j, g=g: (b // g, j)),
+        ]
     nk = L // ck
-    kv_len = L if kv_len < 0 else kv_len
 
     kernel = functools.partial(_attn_kernel, nk=nk, cq=cq, ck=ck, dh=dh,
-                               causal=causal, kv_len=kv_len)
+                               causal=causal, cache_layout=cache_layout)
+    scalar_spec = pl.BlockSpec((1, 1), lambda b, i, j: (b, 0),
+                               memory_space=pltpu.SMEM)
     return pl.pallas_call(
         kernel,
         grid=(BH, S // cq, nk),
         in_specs=[
+            scalar_spec,  # kv_len
+            scalar_spec,  # q_offset
+            scalar_spec,  # window
             pl.BlockSpec((1, cq, dh), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, ck, dh), lambda b, i, j, g=g: (b // g, j, 0)),
-            pl.BlockSpec((1, ck), lambda b, i, j, g=g: (b // g, j)),
-            pl.BlockSpec((1, ck, dh), lambda b, i, j, g=g: (b // g, j, 0)),
-            pl.BlockSpec((1, ck), lambda b, i, j, g=g: (b // g, j)),
+            *kv_specs,
         ],
         out_specs=pl.BlockSpec((1, cq, dh), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, dh), q.dtype),
@@ -115,4 +163,55 @@ def mxsf_flash_attention(q, k_codes, k_scales, v_codes, v_scales, *,
             pltpu.VMEM((cq, dh), jnp.float32),    # accumulator
         ],
         interpret=interpret,
-    )(q, k_codes, k_scales, v_codes, v_scales)
+    )(kv_len, q_offset, window, q, k_codes, k_scales, v_codes, v_scales)
+
+
+def per_row_scalar(val, default, BH: int):
+    """Normalize None / python int / scalar / (BH,) array -> (BH, 1) i32.
+
+    Negative entries (python or traced, scalar or per-row) mean "use the
+    default" — the kv_len=-1 = "all of L" convention.  Shared by the kernel
+    wrapper, ops.mxsf_attention and the jnp oracle so the contract can't
+    drift between them.
+    """
+    if val is None:
+        return jnp.full((BH, 1), default, jnp.int32)
+    val = jnp.asarray(val, jnp.int32)
+    val = jnp.where(val < 0, default, val)
+    if val.ndim == 0:
+        val = jnp.broadcast_to(val, (BH,))
+    return val.reshape(BH, 1)
+
+
+def mxsf_flash_attention(q, k_codes, k_scales, v_codes, v_scales, *,
+                         causal: bool = True, cq: int = 256, ck: int = 256,
+                         kv_len=None, q_offset=None, window=None,
+                         interpret: bool = False):
+    """Flash attention over MXSF-packed K/V.
+
+    q: (BH, S, dh).  Two K/V layouts, told apart by ndim:
+      * row layout  : codes (BKV, L, dh) uint8, scales (BKV, L) uint8
+      * cache layout: codes (B, L, kv, dh), scales (B, L, kv, 1) — the KV
+        cache pytree as stored by models/decoding.py; the BlockSpec index
+        maps adapt it, so decode feeds the cache buffers without a copy.
+    ``kv_len``/``q_offset``/``window`` are *dynamic* per-row scalars (python
+    int, scalar, or (BH,) array; negative ``kv_len`` = all of L) — a
+    growing decode cache does NOT recompile the kernel.
+    Returns (BH, S, dh) in q.dtype.
+    """
+    BH, S, dh = q.shape
+    if k_codes.ndim == 4:
+        B, L, KV, dh2 = k_codes.shape
+        assert dh == dh2 and BH % B == 0 and (BH // B) % KV == 0
+    else:
+        BKV, L, dh2 = k_codes.shape
+        assert dh == dh2 and BH % BKV == 0
+    cq = min(cq, S)
+    ck = min(ck, L)
+    assert S % cq == 0 and L % ck == 0, (S, cq, L, ck)
+    kvl = jnp.minimum(per_row_scalar(kv_len, L, BH), L)
+    off = per_row_scalar(q_offset, 0, BH)
+    win = per_row_scalar(window, NO_WINDOW, BH)
+    return _flash_attention_jit(kvl, off, win, q, k_codes, k_scales, v_codes,
+                                v_scales, causal=causal, cq=cq, ck=ck,
+                                interpret=interpret)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from .mx_matmul import mxsf_matmul_pallas
-from .mxsf_attention import mxsf_flash_attention
+from .mxsf_attention import mxsf_flash_attention, per_row_scalar
 from .mxsf_fused_matmul import mxsf_fused_matmul_pallas
 from .mxsf_quant import mxsf_quantize_pallas
 
@@ -127,8 +127,36 @@ def mxsf_fused_matmul(x, w_codes, w_scales, xblk=(1, 32), wblk=(32, 1),
 
 
 def mxsf_attention(q, k_codes, k_scales, v_codes, v_scales, *, causal=True,
-                   cq: int = 256, ck: int = 256, kv_len: int = -1):
-    """Flash attention over an MXSF-packed KV cache (serving hot path)."""
-    return mxsf_flash_attention(q, k_codes, k_scales, v_codes, v_scales,
-                                causal=causal, cq=cq, ck=ck, kv_len=kv_len,
-                                interpret=_interpret())
+                   cq: int = 256, ck: int = 256, kv_len=None, q_offset=None,
+                   window=None):
+    """Flash attention over an MXSF-packed KV cache (serving hot path).
+
+    Accepts any (S, L): pads queries/cache up to chunk multiples (zero codes
+    decode to 0.0 and padded cache columns sit beyond ``kv_len``, so they
+    never contribute) and crops the output back to (BH, S, dh).  K/V may be
+    in row layout (BKV, L, dh) or cache layout (B, L, kv, dh) — see
+    ``mxsf_flash_attention``.  ``kv_len``/``q_offset``/``window`` are
+    dynamic per-row scalars; a growing decode cache reuses one compile.
+    """
+    BH, S, dh = q.shape
+    L = k_codes.shape[1]
+    cq_, sp = _tile_for(S, cq, 1)
+    ck_, lp = _tile_for(L, ck, 1)
+    if sp > S:
+        q = jnp.pad(q, ((0, 0), (0, sp - S), (0, 0)))
+    if lp > L:
+        pad = [(0, 0)] * k_codes.ndim
+        pad[1] = (0, lp - L)
+        k_codes = jnp.pad(k_codes, pad)
+        v_codes = jnp.pad(v_codes, pad)
+        spad = pad[: k_scales.ndim]
+        k_scales = jnp.pad(k_scales, spad)
+        v_scales = jnp.pad(v_scales, spad)
+    # resolve negative/None kv_len against the UNPADDED width so the padded
+    # columns always stay masked
+    kvl = jnp.minimum(per_row_scalar(kv_len, L, BH), L)
+    y = mxsf_flash_attention(q, k_codes, k_scales, v_codes, v_scales,
+                             causal=causal, cq=cq_, ck=ck_, kv_len=kvl,
+                             q_offset=q_offset, window=window,
+                             interpret=_interpret())
+    return y[:, :S]

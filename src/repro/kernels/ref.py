@@ -47,13 +47,21 @@ def mxsf_qdq_matmul_ref(x, w, xblk=(1, 32), wblk=(32, 1)):
 
 
 def mxsf_flash_attention_ref(q, k_codes, k_scales, v_codes, v_scales,
-                             causal=True, kv_len=-1):
-    """Oracle: dequantize the packed cache, plain softmax attention."""
-    import jax
+                             causal=True, kv_len=None, q_offset=None,
+                             window=None):
+    """Oracle: dequantize the packed cache, plain softmax attention.
+
+    ``kv_len``/``q_offset``/``window`` mirror the kernel's per-row dynamic
+    scalars (python int, scalar, or (BH,) array); fully-masked rows return 0
+    (not a uniform average) — same contract as the kernel's masked-tile fix.
+    """
+    from .mxsf_attention import NO_WINDOW, per_row_scalar
     BH, S, dh = q.shape
     BKV, L, _ = k_codes.shape
     g = BH // BKV
-    kv_len = L if kv_len < 0 else kv_len
+    kvl = jnp.minimum(per_row_scalar(kv_len, L, BH), L)[:, 0]
+    off = per_row_scalar(q_offset, 0, BH)[:, 0]
+    win = per_row_scalar(window, NO_WINDOW, BH)[:, 0]
     k = B.dequantize(B.QuantizedTensor(k_codes, k_scales[..., None], "mxsf",
                                        (dh,), k_codes.shape, "float32"))
     v = B.dequantize(B.QuantizedTensor(v_codes, v_scales[..., None], "mxsf",
@@ -61,11 +69,14 @@ def mxsf_flash_attention_ref(q, k_codes, k_scales, v_codes, v_scales,
     k = jnp.repeat(k, g, axis=0)
     v = jnp.repeat(v, g, axis=0)
     s = jnp.einsum("bsd,bld->bsl", q.astype(jnp.float32), k) / (dh ** 0.5)
-    qpos = jnp.arange(S)[:, None]
-    kpos = jnp.arange(L)[None, :]
-    mask = kpos < kv_len
+    qpos = off[:, None, None] + jnp.arange(S)[None, :, None]  # (BH, S, 1)
+    kpos = jnp.arange(L)[None, None, :]
+    mask = kpos < kvl[:, None, None]
     if causal:
         mask = mask & (kpos <= qpos)
-    s = jnp.where(mask[None], s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
+    mask = mask & (kpos > qpos - win[:, None, None])
+    s = jnp.where(mask, s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
     return jnp.einsum("bsl,bld->bsd", p, v).astype(q.dtype)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..core import sharding as shd
-from ..core.mx_dot import mx_dot, mx_einsum
+from ..core.mx_dot import mx_dot, mx_einsum, qdq_along
 from ..core.policy import QuantPolicy
 
 
@@ -110,6 +110,20 @@ def _attn_mask_bias(qpos, kpos, *, causal: bool, window: Optional[int]):
     return jnp.where(allowed, 0.0, -1e30).astype(jnp.float32)
 
 
+def attn_kernel_eligible(cfg: ModelConfig, policy: QuantPolicy) -> bool:
+    """Static (cfg x policy) half of the packed-attention kernel gate.
+
+    The dynamic half — single-token decode, self-attention, causal — is
+    checked at the call site in ``attention``.  Softcap and SWA patterns
+    fall back: the kernel applies neither tanh capping nor the ring-aware
+    slot->position window math (window-free causal decode stays correct
+    under ring wrap because ``kv_len`` clamps to the cache width).
+    ``models/model.py::decode_attn_backend`` reports this same predicate.
+    """
+    return (policy.use_pallas_attention and not cfg.attn_softcap
+            and cfg.swa_pattern == "none")
+
+
 def attention(p, x, cfg: ModelConfig, policy: QuantPolicy, *,
               positions=None, kv_positions=None, kv_x=None, kv_cached=None,
               causal=True, window=None, cache=None, cache_pos=None):
@@ -177,7 +191,8 @@ def attention(p, x, cfg: ModelConfig, policy: QuantPolicy, *,
         qpos = pos_vec[:, None] + jnp.arange(S)[None, :]
     if cache is not None and "k_codes" in cache:
         # 8-bit MX-packed KV cache (policy.kv_cache_fmt): new k/v quantize
-        # along dh; reads dequantize the whole (1-byte) cache.
+        # along dh; reads either feed the codes straight into the flash
+        # kernel (pallas decode path below) or dequantize the whole cache.
         from ..core import blocking as mxblk
         fmt = policy.kv_cache_fmt or "mxsf"
         new_cache = dict(cache)
@@ -186,6 +201,13 @@ def attention(p, x, cfg: ModelConfig, policy: QuantPolicy, *,
             new_cache[f"{nm}_codes"] = _write(cache[f"{nm}_codes"], qt.codes)
             new_cache[f"{nm}_scales"] = _write(cache[f"{nm}_scales"],
                                                qt.scale_e8m0)
+        if (attn_kernel_eligible(cfg, policy) and S == 1 and kv_x is None
+                and causal):
+            # single-token decode through the flash kernel: it reads the
+            # 1-byte codes directly — no value-domain cache and no S x L
+            # score matrix in HBM
+            return _attend_packed(q, new_cache, pos_vec, window, p, cfg,
+                                  policy), new_cache
         kc, vc = new_cache["k_codes"], new_cache["v_codes"]
         k = mxblk.dequantize(mxblk.QuantizedTensor(
             kc, new_cache["k_scales"], fmt, (dh,), kc.shape, str(x.dtype)))
@@ -211,6 +233,40 @@ def attention(p, x, cfg: ModelConfig, policy: QuantPolicy, *,
                    p, x, cfg, policy,
                    kv_prequant=bool(cache is not None
                                     and "k_codes" in cache)), new_cache
+
+
+def _attend_packed(q, cache, pos_vec, window, p, cfg: ModelConfig,
+                   policy: QuantPolicy):
+    """Decode-step attention consuming the packed MXSF cache directly.
+
+    Routes through ``kernels/ops.py::mxsf_attention`` (SAFE-MAC dataflow:
+    E8M0-scaled codes decoded at the MAC array).  q is 1D-quantized along dh
+    when ``policy.attn_matmuls`` — the same operand treatment ``mx_einsum``
+    applies; softmax probabilities stay f32 inside the online softmax (the
+    one documented divergence from the jnp emulation, which re-quantizes the
+    normalized probs before the V matmul).  ``kv_len``/``q_offset``/
+    ``window`` ride as dynamic per-row scalars, so a growing cache never
+    recompiles the kernel.
+    """
+    from ..kernels import ops as kops
+    B, S, h, dh = q.shape
+    # cache-layout operands go to the kernel as-is — the BlockSpec index
+    # maps adapt (B, W, kv, dh) to kernel rows, so the packed cache never
+    # makes a relaid HBM copy (see decoding.kv_cache_rows for the mapping)
+    kc, ks = cache["k_codes"], cache["k_scales"]
+    vc, vs = cache["v_codes"], cache["v_scales"]
+    qr = q.transpose(0, 2, 1, 3).reshape(B * h, S, dh)
+    if policy.attn_matmuls:
+        qr = qdq_along(qr, policy.fwd_fmt, policy, -1)
+    kvl = jnp.repeat(pos_vec + S, h)   # slots 0..pos hold positions 0..pos
+    off = jnp.repeat(pos_vec, h)       # the query sits at absolute pos
+    win = (None if window is None else
+           jnp.repeat(jnp.broadcast_to(jnp.asarray(window, jnp.int32), (B,)),
+                      h))
+    y = kops.mxsf_attention(qr, kc, ks, vc, vs, causal=True, kv_len=kvl,
+                            q_offset=off, window=win)
+    ctx = y.reshape(B, h, S, dh).transpose(0, 2, 1, 3).reshape(B, S, h * dh)
+    return dense(ctx, p["wo"], policy)
 
 
 ATTN_CHUNK = 1024  # query-chunk target (flash-style; bounds score memory)

@@ -21,7 +21,37 @@ from . import ssd
 from .transformer import (NO_WINDOW, _apply_ffn, _hybrid_split, _layer_windows,
                           _lm_head, _sinusoid_pos, encode)
 
-__all__ = ["init_cache", "decode_step", "prefill"]
+__all__ = ["init_cache", "decode_step", "prefill", "kv_cache_rows"]
+
+
+def kv_cache_rows(cache):
+    """One layer's packed KV cache in the flash-kernel *row* layout.
+
+    The cache pytree stores per-layer codes as ``(B, W, kv, dh)`` uint8 with
+    ``(B, W, kv, 1)`` E8M0 scales (position-major, so decode writes are one
+    ``dynamic_update_slice`` per step).  ``kernels/mxsf_attention.py`` maps
+    one kernel row per (batch x kv-head): codes ``(B*kv, W, dh)``, scales
+    ``(B*kv, W)`` — rows batch-major so q row ``b*h + head`` reads kv row
+    ``(b*h + head) // (h // kv) = b*kv + head_kv``.
+
+    The decode hot path does NOT call this: the kernel's cache-layout
+    BlockSpec index maps perform the same adaptation in-place (no relaid
+    HBM copy).  This helper materializes the equivalent row tensors for
+    tests and offline tools; ``tests/test_attention_backend.py`` asserts
+    both layouts produce identical kernel output.
+    Returns ``(k_codes, k_scales, v_codes, v_scales)``.
+    """
+    kc = cache["k_codes"]
+    B, W, kv, dh = kc.shape
+
+    def rows(c):
+        return c.transpose(0, 2, 1, 3).reshape(B * kv, W, dh)
+
+    def srows(s):
+        return s[..., 0].transpose(0, 2, 1).reshape(B * kv, W)
+
+    return (rows(kc), srows(cache["k_scales"]),
+            rows(cache["v_codes"]), srows(cache["v_scales"]))
 
 
 def _attn_cache(cfg: ModelConfig, lead, batch, W, dtype, kv_fmt: str = ""):

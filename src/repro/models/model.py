@@ -23,6 +23,25 @@ decode_step = decoding.decode_step
 prefill = decoding.prefill
 
 
+def decode_attn_backend(cfg: ModelConfig, policy: QuantPolicy) -> str:
+    """Which datapath single-token decode attention will take.
+
+    * ``'pallas-packed'`` — the MXSF flash kernel consumes the packed cache
+      codes directly (kernels/mxsf_attention.py; SAFE-MAC dataflow).
+    * ``'jnp'`` — dequantize-the-cache + ``mx_einsum`` reference path
+      (also the fallback for softcapped attention and SWA patterns, whose
+      window masks need the jnp path's ring-aware slot->position math).
+
+    Shares ``blocks.attn_kernel_eligible`` with the gate in
+    ``blocks.attention`` (no drift); the serving engine records it so
+    deployments can assert the fast path actually engaged.
+    """
+    from . import blocks
+    if blocks.attn_kernel_eligible(cfg, policy):
+        return "pallas-packed"
+    return "jnp"
+
+
 def param_count(params) -> int:
     return sum(x.size for x in jax.tree.leaves(params))
 

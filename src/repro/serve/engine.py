@@ -56,6 +56,10 @@ class ServeEngine:
             # validates eagerly so a bad combo fails at engine construction
             policy = policy.replace(backend=backend)
             _ = policy.use_pallas
+        # which decode attention datapath this engine's policy selects:
+        # 'pallas-packed' = flash kernel over the packed MXSF cache codes,
+        # 'jnp' = dequantize + mx_einsum (see models/model.py)
+        self.attn_backend = M.decode_attn_backend(cfg, policy)
         self.cfg = cfg
         self.params = params
         self.policy = policy
@@ -78,9 +82,23 @@ class ServeEngine:
         self._uid = 0
         self.ticks = 0
 
-    def submit(self, prompt: List[int], max_new: int) -> Request:
+    def submit(self, prompt: List[int], max_new: int,
+               truncate: bool = False) -> Request:
+        """Queue a prompt.  A prompt longer than the cache rejects (or, with
+        ``truncate=True``, keeps the first ``max_len`` tokens): prefill
+        writes one cache column per prompt token, so anything longer would
+        run past the cache width and previously spun until ``max_ticks``
+        writing out-of-bounds columns."""
+        prompt = list(prompt)
+        if len(prompt) > self.max_len:
+            if not truncate:
+                raise ValueError(
+                    f"prompt length {len(prompt)} exceeds the engine cache "
+                    f"(max_len={self.max_len}); pass truncate=True or size "
+                    "the engine for the workload")
+            prompt = prompt[: self.max_len]
         self._uid += 1
-        req = Request(self._uid, list(prompt), max_new)
+        req = Request(self._uid, prompt, max_new)
         self.queue.append(req)
         return req
 
@@ -122,7 +140,11 @@ class ServeEngine:
             req = self.live[s]
             if req is None:
                 continue  # idle slot: pos unchanged, column rewritten later
-            self.pos[s] += 1
+            # cap at the cache width: position max_len has no column, and an
+            # uncapped pos kept a full-length request alive forever (the old
+            # done-guard below also required a non-empty ``out``, so a
+            # prompt >= max_len spun until max_ticks writing OOB columns)
+            self.pos[s] = min(self.pos[s] + 1, self.max_len)
             if prefilling[s]:
                 self.last_tok[s] = (self.pending_prompt[s][0]
                                     if self.pending_prompt[s] else int(nxt[s]))
@@ -133,8 +155,8 @@ class ServeEngine:
             else:
                 req.out.append(int(nxt[s]))
                 self.last_tok[s] = int(nxt[s])
-            if req.out and (len(req.out) >= req.max_new
-                            or self.pos[s] >= self.max_len):
+            if (len(req.out) >= req.max_new
+                    or self.pos[s] >= self.max_len):
                 req.done = True
                 done.append(req)
                 self.live[s] = None

@@ -44,6 +44,91 @@ def test_flash_kv_len_mask():
                                           kv_len=kv_len)
         np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                    rtol=1e-5, atol=2e-5)
+    # negative kv_len means "all of L" in every form, traced/array included
+    full = ops.mxsf_attention(q, kc, ks, vc, vs, causal=False, cq=8, ck=32)
+    for neg in (-1, jnp.int32(-1), jnp.full((2,), -1, jnp.int32)):
+        y = ops.mxsf_attention(q, kc, ks, vc, vs, causal=False, cq=8, ck=32,
+                               kv_len=neg)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(full))
+
+
+def test_flash_fully_masked_chunk():
+    """kv_len=0 (and any fully-masked tile) must yield 0, not a uniform
+    average of masked V rows (the exp(NEG_INF - NEG_INF) = 1 bug)."""
+    BKV, L, dh, S = 1, 64, 32, 4
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.standard_normal((1, S, dh)).astype(np.float32))
+    kc, ks, vc, vs = _packed_kv(BKV, L, dh, seed=6)
+    y = ops.mxsf_attention(q, kc, ks, vc, vs, causal=False, cq=4, ck=16,
+                           kv_len=0)
+    yr = ref.mxsf_flash_attention_ref(q, kc, ks, vc, vs, causal=False,
+                                      kv_len=0)
+    assert np.all(np.asarray(y) == 0.0), np.asarray(y)
+    assert np.all(np.asarray(yr) == 0.0)
+    # kv_len=5 with ck=16: chunks 1..3 fully masked, chunk 0 partial
+    y = ops.mxsf_attention(q, kc, ks, vc, vs, causal=False, cq=4, ck=16,
+                           kv_len=5)
+    yr = ref.mxsf_flash_attention_ref(q, kc, ks, vc, vs, causal=False,
+                                      kv_len=5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=2e-5)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_flash_nonaligned_kv_len_padding():
+    """L not a multiple of the chunk: the ops wrapper pads the cache with
+    zero codes and masks the padded columns via kv_len."""
+    BKV, L, dh, S = 2, 100, 32, 3
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((4, S, dh)).astype(np.float32))
+    kc, ks, vc, vs = _packed_kv(BKV, L, dh, seed=8)
+    for kv_len in (1, 33, 100):
+        y = ops.mxsf_attention(q, kc, ks, vc, vs, causal=False, cq=4, ck=32,
+                               kv_len=kv_len)
+        yr = ref.mxsf_flash_attention_ref(q, kc, ks, vc, vs, causal=False,
+                                          kv_len=kv_len)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-5, atol=2e-5)
+
+
+def test_flash_q_offset_and_window():
+    """Per-row dynamic q_offset (decode: query at absolute position p) and
+    SWA window masks match the oracle."""
+    BKV, L, dh = 2, 64, 32
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.standard_normal((4, 1, dh)).astype(np.float32))
+    kc, ks, vc, vs = _packed_kv(BKV, L, dh, seed=10)
+    off = jnp.asarray([3, 17, 40, 63], jnp.int32)
+    kvl = off + 1
+    win = jnp.asarray([8, 1 << 30, 16, 5], jnp.int32)
+    y = ops.mxsf_attention(q, kc, ks, vc, vs, causal=True, cq=1, ck=16,
+                           kv_len=kvl, q_offset=off, window=win)
+    yr = ref.mxsf_flash_attention_ref(q, kc, ks, vc, vs, causal=True,
+                                      kv_len=kvl, q_offset=off, window=win)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=2e-5)
+
+
+def test_flash_single_compile_growing_cache():
+    """kv_len/q_offset are dynamic operands: decoding with a growing cache
+    must NOT retrace/recompile the kernel per token (the old static
+    ``kv_len`` recompiled every step)."""
+    from repro.kernels import mxsf_attention as MA
+    BKV, L, dh = 1, 64, 32
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.standard_normal((2, 1, dh)).astype(np.float32))
+    kc, ks, vc, vs = _packed_kv(BKV, L, dh, seed=12)
+    outs = []
+    base = None
+    for step in range(8):
+        y = ops.mxsf_attention(q, kc, ks, vc, vs, causal=True, cq=1, ck=16,
+                               kv_len=step + 1, q_offset=step)
+        if base is None:
+            base = MA.trace_count()  # first call may compile
+        outs.append(np.asarray(y))
+    assert MA.trace_count() == base, "growing kv_len retraced the kernel"
+    # and the masking actually changed across steps
+    assert not np.allclose(outs[0], outs[-1])
 
 
 def test_flash_chunk_invariance():
