@@ -1,18 +1,45 @@
-"""Shared benchmark helpers: timing, CSV emit, small trained models."""
+"""Shared benchmark helpers: timing, CSV emit + JSON export, small trained
+models."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
 ROWS = []
+ROWS_JSON = []
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+def emit(name: str, us_per_call: float, derived: str = "", **fields):
+    """Record one benchmark row.
+
+    ``fields`` carries machine-readable values (dispatch counts, HBM
+    bytes, ...) into the JSON export alongside the legacy CSV columns.
+    """
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    ROWS_JSON.append({"name": name, "us_per_call": round(us_per_call, 1),
+                      "derived": derived, **fields})
     print(row, flush=True)
+
+
+def write_json(path: str, start: int = 0):
+    """Dump rows emitted since index ``start`` as a machine-readable JSON
+    file, so the perf trajectory can be tracked across PRs (CI uploads it
+    as a workflow artifact) instead of living only in log text.
+
+    ``start`` lets a benchmark scope the export to its own rows: snapshot
+    ``len(ROWS_JSON)`` on entry so a multi-benchmark driver run doesn't
+    leak earlier benchmarks' rows into the file.
+    """
+    rows = ROWS_JSON[start:]
+    doc = {"time": time.time(), "backend": jax.default_backend(),
+           "rows": rows}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {path} ({len(rows)} rows)", flush=True)
 
 
 def time_call(fn, *args, iters: int = 5, warmup: int = 1):

@@ -2,9 +2,13 @@
 
 Wall-clock on CPU interpret mode is NOT TPU performance; the structural
 numbers (VMEM working set per tile, bytes moved, MXU-aligned dims, FLOPs)
-are what transfer.  Emits both.
+are what transfer.  Emits both, as CSV log lines and as a machine-readable
+``BENCH_kernel.json`` (override the path with ``$BENCH_KERNEL_JSON``) so
+the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -12,10 +16,12 @@ import numpy as np
 
 from repro.kernels import ops, ref
 
-from .common import emit, time_call
+from . import common
+from .common import emit, time_call, write_json
 
 
 def run():
+    json_start = len(common.ROWS_JSON)  # scope the JSON export to our rows
     rng = np.random.default_rng(0)
     M, K, N = 256, 512, 256
     x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
@@ -71,6 +77,94 @@ def run():
     emit("kernel_unfused_qmm_interp", us_u, "")
     emit("kernel_fused_qmm_interp", us_f,
          f"bitexact_vs_unfused={bool(jnp.array_equal(yu, yf))}")
+
+    # ---- pack-once weight store vs per-call requantize vs bf16 ----------
+    # Steady-state decode serves every linear from resident MXSF codes
+    # (core/packed_store.py).  The per-call path pays an extra quantizer
+    # dispatch per matmul and streams the f32 master weights through HBM
+    # plus a codes write+readback; the packed store reads 1-byte codes
+    # only; the bf16 baseline reads 2-byte values.  Weight side only —
+    # activation traffic is identical across the three.
+    from repro.core import packed_store as PS
+    from repro.core.mx_dot import mx_dot
+    from repro.core.policy import QuantPolicy
+
+    pol = QuantPolicy(block_mode="1d", block_1d=32, quantize_bwd=False,
+                      backend="pallas")
+    qw = PS.pack_leaf(w, pol)
+
+    def percall(xv):
+        return mx_dot(xv, w, pol)
+
+    def packed(xv):
+        return mx_dot(xv, qw, pol)
+
+    d_pc, d_pk = n_dispatch(percall, x), n_dispatch(packed, x)
+    wcodes = K * N + K * N // 32              # codes + E8M0 scale bytes
+    hbm_pc = K * N * 4 + 2 * wcodes           # f32 read + codes write+read
+    hbm_pk = wcodes                           # resident codes read
+    hbm_bf16 = K * N * 2                      # bf16-resident baseline
+    emit("kernel_weight_percall_dispatches", 0.0, str(d_pc), dispatches=d_pc)
+    emit("kernel_weight_packed_dispatches", 0.0, str(d_pk), dispatches=d_pk)
+    emit("kernel_weight_percall_hbm_bytes_per_tok", 0.0, str(hbm_pc),
+         hbm_bytes=hbm_pc)
+    emit("kernel_weight_packed_hbm_bytes_per_tok", 0.0, str(hbm_pk),
+         hbm_bytes=hbm_pk)
+    emit("kernel_weight_bf16_hbm_bytes_per_tok", 0.0, str(hbm_bf16),
+         hbm_bytes=hbm_bf16)
+    assert d_pk < d_pc and hbm_pk < hbm_pc and hbm_pk < hbm_bf16
+    us_pc, y_pc = time_call(lambda: percall(x), iters=3)
+    us_pk, y_pk = time_call(lambda: packed(x), iters=3)
+    emit("kernel_weight_percall_interp", us_pc, "")
+    emit("kernel_weight_packed_interp", us_pk,
+         f"bitexact_vs_percall={bool(jnp.array_equal(y_pc, y_pk))}")
+    emit("kernel_weight_packed_below_percall", 0.0,
+         f"dispatches={d_pk}<{d_pc},hbm={hbm_pk}<{hbm_pc}"
+         f"({hbm_pc / hbm_pk:.1f}x_less_weight_traffic_per_call,"
+         f"{hbm_bf16 / hbm_pk:.1f}x_below_bf16_resident)",
+         dispatches=d_pk, hbm_bytes=hbm_pk)
+
+    # ---- packed->packed requantize vs dequantize->quantize roundtrip ----
+    # The Fig. 4a backward re-blocks x/w along the transposed contraction
+    # dim.  The requantize kernel keeps codes uint8 end-to-end; the old
+    # path materialized the full f32 tensor in HBM between a jnp dequantize
+    # graph and the quantizer dispatch (1 pallas dispatch either way — the
+    # win is the HBM traffic, tracked in the *_hbm_bytes rows below).
+    from repro.core import blocking as B
+
+    qt = B.quantize(w, "mxsf", (32, 1))
+
+    def requant_kernel(c, s):
+        return ops.mxsf_requantize(c, s, (32, 1), (1, 32))
+
+    def requant_roundtrip(c, s):
+        v = B.dequantize(B.QuantizedTensor(c, s, "mxsf", (32, 1),
+                                           (K, N), "float32"))
+        return ops.mxsf_quantize(v, block=(1, 32))
+
+    d_rq = n_dispatch(requant_kernel, qt.codes, qt.scale_e8m0)
+    d_rt = n_dispatch(requant_roundtrip, qt.codes, qt.scale_e8m0)
+    hbm_rq = 2 * wcodes                       # codes in + codes out
+    hbm_rt = wcodes + 2 * K * N * 4 + wcodes  # + f32 write & read between
+    emit("kernel_requant_packed_dispatches", 0.0, str(d_rq), dispatches=d_rq)
+    emit("kernel_requant_roundtrip_dispatches", 0.0, str(d_rt),
+         dispatches=d_rt)
+    emit("kernel_requant_packed_hbm_bytes", 0.0, str(hbm_rq),
+         hbm_bytes=hbm_rq)
+    emit("kernel_requant_roundtrip_hbm_bytes", 0.0, str(hbm_rt),
+         hbm_bytes=hbm_rt)
+    us_rq, (rc, rs) = time_call(
+        lambda: requant_kernel(qt.codes, qt.scale_e8m0), iters=3)
+    us_rt, (tc, ts) = time_call(
+        lambda: requant_roundtrip(qt.codes, qt.scale_e8m0), iters=3)
+    bitexact = bool(jnp.array_equal(rc, tc) & jnp.array_equal(rs, ts))
+    emit("kernel_requant_packed_interp", us_rq,
+         f"bitexact_vs_roundtrip={bitexact}")
+    emit("kernel_requant_roundtrip_interp", us_rt, "")
+    assert bitexact and hbm_rq < hbm_rt
+    emit("kernel_requant_below_roundtrip", 0.0,
+         f"hbm={hbm_rq}<{hbm_rt}({hbm_rt / hbm_rq:.1f}x_less_traffic)",
+         dispatches=d_rq, hbm_bytes=hbm_rq)
 
     # ---- packed-KV decode attention: flash kernel vs dequantize+einsum ----
     # Serving hot path (models/blocks.py::_attend_packed): the kernel reads
@@ -136,6 +230,9 @@ def run():
         emit(f"kernel_matmul_tile{t}_vmem_bytes", 0.0, str(vmem))
         emit(f"kernel_matmul_tile{t}_arith_intensity", 0.0,
              f"{ai:.0f}flops/byte(vs_v5e_ridge={197e12/819e9:.0f})")
+
+    write_json(os.environ.get("BENCH_KERNEL_JSON", "BENCH_kernel.json"),
+               start=json_start)
 
 
 if __name__ == "__main__":

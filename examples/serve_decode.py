@@ -1,5 +1,7 @@
 """Batched serving demo: prefill a prompt batch, decode with the MXSF
-inference policy (1x64 blocks) and a ring KV cache.
+inference policy (1x64 blocks), a ring KV cache, and the pack-once weight
+store (weights quantized ONCE to resident MXSF codes; every decode step
+serves from the codes with zero weight-quantize dispatches).
 
     PYTHONPATH=src python examples/serve_decode.py [--arch h2o-danube-1.8b-reduced]
 """
@@ -10,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config
+from repro.core import packed_store
 from repro.core.policy import MXSF_INFER
 from repro.models import model as M
 
@@ -20,11 +23,23 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--no-pack", action="store_true",
+                    help="keep full-precision weights (re-quantize per call)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     policy = MXSF_INFER.replace(block_1d=16)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
+    if not args.no_pack:
+        # pack ONCE: matmul weights become resident uint8 codes + E8M0
+        # scales; the f32 originals can be dropped from device memory
+        params = M.pack_model_params(cfg, params, policy)
+        nb = packed_store.store_nbytes(params)
+        print(f"packed weight store: {nb['packed'] / 1e6:.2f} MB packed "
+              f"(+{nb['value'] / 1e6:.2f} MB value leaves) vs "
+              f"{nb['value_f32'] / 1e6:.2f} MB f32 / "
+              f"{nb['value_bf16'] / 1e6:.2f} MB bf16 for the same weights "
+              f"({nb['value_f32'] / max(nb['packed'], 1):.1f}x smaller)")
     B = args.batch
     max_len = args.prompt_len + args.gen
 

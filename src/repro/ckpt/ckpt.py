@@ -10,6 +10,12 @@ Layout:  <dir>/step_<N>/arrays.npz + manifest.json
     saves its addressable shards under process_<i>/ and restore stitches by
     global index — the manifest already records mesh/axis metadata for that.
   * async: ``save(..., blocking=False)`` hands the host copy to a thread.
+  * packed params: a pack-once weight store (``core/packed_store.py``)
+    checkpoints as its uint8 codes + E8M0 scales; the manifest records the
+    static MX metadata (format, block, logical shape, dtype) per packed
+    leaf, and restore validates it against the target structure — a served
+    model restores from codes without ever materializing full-precision
+    weights (build the target with ``models/model.packed_model_specs``).
 """
 from __future__ import annotations
 
@@ -24,24 +30,51 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from ..core.blocking import QuantizedTensor
+
 __all__ = ["save", "restore", "latest_step", "wait_pending"]
 
 _PENDING: list = []
+
+
+def _key_str(p) -> str:
+    # DictKey has .key, SequenceKey has .idx, GetAttrKey (registered
+    # dataclasses like QuantizedTensor) has .name
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
 
 
 def _flatten(tree):
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        key = "/".join(_key_str(p) for p in path)
         out[key] = np.asarray(jax.device_get(leaf))
     return out
+
+
+def _iter_packed(tree):
+    """(path_str, QuantizedTensor) pairs for every packed leaf."""
+    flat = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, QuantizedTensor))[0]
+    for path, leaf in flat:
+        if isinstance(leaf, QuantizedTensor):
+            yield "/".join(_key_str(p) for p in path), leaf
+
+
+def _packed_meta(tree) -> dict:
+    return {key: {"fmt": qt.fmt, "block": list(qt.block),
+                  "shape": list(qt.shape), "dtype": str(qt.dtype)}
+            for key, qt in _iter_packed(tree)}
 
 
 def save(ckpt_dir: str, step: int, state: Any, *, keep: int = 3,
          blocking: bool = True, extra: Optional[dict] = None):
     os.makedirs(ckpt_dir, exist_ok=True)
     arrays = _flatten(state)  # host copy happens now; write may be async
+    packed_meta = _packed_meta(state)
 
     def _write():
         tmp = os.path.join(ckpt_dir, f".tmp-step_{step:08d}")
@@ -53,6 +86,7 @@ def save(ckpt_dir: str, step: int, state: Any, *, keep: int = 3,
             "time": time.time(),
             "n_arrays": len(arrays),
             "bytes": int(sum(a.nbytes for a in arrays.values())),
+            "packed": packed_meta,
             "extra": extra or {},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -108,15 +142,15 @@ def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:08d}", "arrays.npz")
-    data = np.load(path)
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(step_dir, "arrays.npz"))
+    _check_packed_meta(step_dir, target)
     paths, tdef = jax.tree_util.tree_flatten_with_path(target)
     leaves = []
     flat_shard = (jax.tree_util.tree_leaves(shardings)
                   if shardings is not None else [None] * len(paths))
     for (path_k, leaf), shard in zip(paths, flat_shard):
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path_k)
+        key = "/".join(_key_str(p) for p in path_k)
         arr = data[key]
         want = jax.numpy.dtype(leaf.dtype)
         arr = arr.astype(want) if arr.dtype != want else arr
@@ -125,3 +159,37 @@ def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
         else:
             leaves.append(jax.numpy.asarray(arr))
     return tdef.unflatten(leaves), step
+
+
+def _check_packed_meta(step_dir: str, target):
+    """Validate the target's packed-leaf static metadata against what the
+    checkpoint recorded: restoring codes under the wrong format/block would
+    silently decode garbage."""
+    mpath = os.path.join(step_dir, "manifest.json")
+    if not os.path.exists(mpath):
+        return
+    with open(mpath) as f:
+        recorded = json.load(f).get("packed")
+    if not recorded:
+        return
+    seen = set()
+    for key, qt in _iter_packed(target):
+        seen.add(key)
+        want = recorded.get(key)
+        if want is None:
+            raise ValueError(f"target has packed leaf {key!r} but the "
+                             "checkpoint saved it unpacked (or not at all)")
+        have = {"fmt": qt.fmt, "block": list(qt.block),
+                "shape": list(qt.shape), "dtype": str(qt.dtype)}
+        if want != have:
+            raise ValueError(f"packed leaf {key!r} metadata mismatch: "
+                             f"checkpoint {want} vs target {have}")
+    missing = sorted(set(recorded) - seen)
+    if missing:
+        # e.g. a tied-head store saved with the injected packed "head" but
+        # restored into a target that would silently project through raw
+        # emb.T — different numerics, no shape error to catch it
+        raise ValueError(f"checkpoint saved packed leaves {missing} that "
+                         "the restore target treats as unpacked; rebuild "
+                         "the target with the same pack (see "
+                         "models/model.packed_model_specs)")

@@ -26,10 +26,24 @@ Backend dispatch (``policy.backend``):
     kernel (``kernels/mxsf_fused_matmul.py``), which also emits the packed
     activation residual for the backward pass.  The backward reuses 2D tiles
     via ``transpose_qt`` (packed dequant-matmul) and re-quantizes through
-    the kernels in the 1D layout.  Off-TPU the kernels run in
+    the packed->packed requantize kernel in the 1D layout (codes in, codes
+    out — no f32 HBM roundtrip).  Off-TPU the kernels run in
     ``interpret=True`` mode; forward outputs are bit-identical to the jnp
     reference whenever K fits one kernel tile (gradients match to f32
     accumulation tolerance).  Pass accounting is unchanged: 1D=6, 2D=3.
+
+Packed weight operand (the pack-once store, ``core/packed_store.py``):
+
+``mx_dot(x, w, policy)`` also accepts ``w`` as a resident
+``blocking.QuantizedTensor``.  That path performs ZERO weight-quantize
+dispatches per call — the fused kernel consumes the resident codes
+directly (and the jnp backend dequantizes them, bit-identical to the
+per-call quantize).  The custom-VJP residual IS the resident tensor: the
+2D backward transposes its tiles via ``transpose_qt``, the 1D backward
+re-blocks it with the requantize kernel, and no activation residual is
+emitted at all because packed weights are frozen — their cotangent is
+symbolically zero (float0), so ``dw`` is never computed.  Pass accounting
+with a packed weight: 1D = 3 (x fwd, w re-block, g), 2D = 2 (x fwd, g).
 """
 from __future__ import annotations
 
@@ -40,6 +54,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import blocking as B
 from .policy import QuantPolicy
@@ -131,6 +146,42 @@ def _pallas_fwd(policy: QuantPolicy, xm, w, with_residuals: bool):
     return y, res
 
 
+def _pallas_dx_2d(policy: QuantPolicy, qtw, gm):
+    """Fig. 4b dx: reuse the resident/residual w tiles via transpose_qt.
+
+    Shared by the raw-weight backward and the packed-store backward.
+    Returns ``(dx_uncropped, (gc, gs) or None)`` — the quantized g is
+    handed back so the raw path can reuse it for dw (g quantized ONCE).
+    """
+    from ..kernels import ops as K
+    blk = (policy.tile, policy.tile)
+    qwT = B.transpose_qt(qtw)
+    if policy.quantize_bwd:
+        _tick()
+        gc, gs = K.mxsf_quantize(gm, block=blk)
+        return K.mxsf_matmul(gc, gs, qwT.codes, qwT.scale_e8m0, blk, blk), \
+            (gc, gs)
+    return K.mxsf_fused_matmul(gm, qwT.codes, qwT.scale_e8m0, blk, blk,
+                               quantize_lhs=False), None
+
+
+def _pallas_dx_1d(policy: QuantPolicy, qtw, gm):
+    """Fig. 4a dx: re-block w along N packed->packed through the
+    requantize kernel (codes in, codes out in VMEM — the old dequantize ->
+    f32 HBM -> quantize pair paid a double full-precision roundtrip).
+
+    Shared by the raw-weight backward and the packed-store backward.
+    """
+    from ..kernels import ops as K
+    b = policy.block_1d
+    _tick()  # w re-blocked along N (still one Fig. 4a quantize pass)
+    wrc, wrs = K.mxsf_requantize(qtw.codes, qtw.scale_e8m0, qtw.block, (1, b))
+    if policy.quantize_bwd:
+        _tick()  # g quantized along N inside the fused prologue
+    return K.mxsf_fused_matmul(gm, wrc.T, wrs.T, (1, b), (b, 1),
+                               quantize_lhs=policy.quantize_bwd)
+
+
 def _pallas_bwd(policy: QuantPolicy, qtx, qtw, gm):
     """Kernel-datapath backward for both layouts (see module docstring)."""
     from ..kernels import ops as K
@@ -140,29 +191,21 @@ def _pallas_bwd(policy: QuantPolicy, qtx, qtw, gm):
     if policy.block_mode == "2d":
         # Fig. 4b: quantize g ONCE as TxT tiles, reuse x/w via transpose_qt
         blk = (policy.tile, policy.tile)
-        qwT, qxT = B.transpose_qt(qtw), B.transpose_qt(qtx)
-        if policy.quantize_bwd:
-            _tick()
-            gc, gs = K.mxsf_quantize(gm, block=blk)
-            dx = K.mxsf_matmul(gc, gs, qwT.codes, qwT.scale_e8m0, blk, blk)
+        dx, g_packed = _pallas_dx_2d(policy, qtw, gm)
+        qxT = B.transpose_qt(qtx)
+        if g_packed is not None:
+            gc, gs = g_packed
             dw = K.mxsf_matmul(qxT.codes, qxT.scale_e8m0, gc, gs, blk, blk)
         else:
-            dx = K.mxsf_fused_matmul(gm, qwT.codes, qwT.scale_e8m0, blk, blk,
-                                     quantize_lhs=False)
             dw = K.mxsf_fused_matmul(gm.T, qtx.codes, qtx.scale_e8m0, blk,
                                      blk, quantize_lhs=False)[:n, :k].T
         return dx[:m, :k], dw[:k, :n]
     # Fig. 4a: re-quantize x, w, g along the transposed contraction dims
     b = policy.block_1d
     quant_g = policy.quantize_bwd
-    _tick()  # w re-quantized along N
-    wrc, wrs = K.mxsf_quantize(B.dequantize(qtw), block=(1, b))
-    if quant_g:
-        _tick()  # g quantized along N inside the fused prologue
-    dx = K.mxsf_fused_matmul(gm, wrc.T, wrs.T, (1, b), (b, 1),
-                             quantize_lhs=quant_g)
-    _tick()  # x re-quantized along M
-    xrc, xrs = K.mxsf_quantize(B.dequantize(qtx), block=(b, 1))
+    dx = _pallas_dx_1d(policy, qtw, gm)
+    _tick()  # x re-blocked along M (packed->packed, like w above)
+    xrc, xrs = K.mxsf_requantize(qtx.codes, qtx.scale_e8m0, qtx.block, (b, 1))
     if quant_g:
         _tick()  # g quantized along M inside the fused prologue
     dw = K.mxsf_fused_matmul(gm.T, xrc, xrs, (1, b), (b, 1),
@@ -274,8 +317,140 @@ def _mx_dot_bwd(policy: QuantPolicy, carry, g):
 _mx_dot.defvjp(_mx_dot_fwd, _mx_dot_bwd)
 
 
-def mx_dot(x: jax.Array, w: jax.Array, policy: QuantPolicy) -> jax.Array:
-    """Quantized ``x @ w`` (x: (..., K), w: (K, N)) per the MX policy."""
+# ---------------------------------------------------------------------------
+# packed weight operand: serve/train from resident MXSF codes
+# ---------------------------------------------------------------------------
+
+def _layer_qt(qt: B.QuantizedTensor) -> B.QuantizedTensor:
+    """Re-align static metadata after ``lax.scan`` slices a stacked store.
+
+    Scanning over a layer-stacked ``QuantizedTensor`` slices the codes /
+    scales arrays but rebuilds the dataclass with the stacked static
+    ``shape``; drop the consumed leading dims so ``dequantize`` crops and
+    ``transpose_qt`` swaps the right axes.
+    """
+    drop = len(qt.shape) - qt.codes.ndim
+    if drop <= 0:
+        return qt
+    return B.QuantizedTensor(qt.codes, qt.scale_e8m0, qt.fmt, qt.block,
+                             tuple(qt.shape[drop:]), qt.dtype)
+
+
+def _check_packed(policy: QuantPolicy, qw: B.QuantizedTensor):
+    if len(qw.shape) != 2:
+        raise ValueError(f"packed mx_dot weight must be 2D after layer "
+                         f"slicing; got shape {qw.shape}")
+    if not policy.enabled:
+        return
+    if qw.fmt != policy.fwd_fmt:
+        raise ValueError(f"packed weight format {qw.fmt!r} != policy "
+                         f"fwd_fmt {policy.fwd_fmt!r}; re-pack the store "
+                         "for this policy")
+    _, wblk = _pol_blocks(policy)
+    if tuple(qw.block) != tuple(wblk):
+        raise ValueError(f"packed weight block {tuple(qw.block)} != the "
+                         f"policy's kernel layout {tuple(wblk)} "
+                         f"(block_mode={policy.block_mode!r}); re-pack the "
+                         "store for this policy")
+
+
+def _qt_zero_cot(qt: B.QuantizedTensor) -> B.QuantizedTensor:
+    """Symbolic-zero cotangent for a resident packed weight: uint8 codes
+    and scales are non-differentiable, so their tangent dtype is float0."""
+    zero = lambda a: np.zeros(np.shape(a), jax.dtypes.float0)
+    return B.QuantizedTensor(zero(qt.codes), zero(qt.scale_e8m0), qt.fmt,
+                             qt.block, qt.shape, qt.dtype)
+
+
+def _packed_fwd(policy: QuantPolicy, xm, qw: B.QuantizedTensor):
+    """Forward against resident codes: ZERO weight-quantize dispatches."""
+    k, n = qw.shape
+    if policy.use_pallas and xm.shape[0] > 0 and k > 0 and n > 0:
+        from ..kernels import ops as K
+        xblk, wblk = _pol_blocks(policy)
+        _tick()  # x quantized on the fly; w codes are resident, no dispatch
+        y = K.mxsf_fused_matmul(xm, qw.codes, qw.scale_e8m0, xblk, wblk,
+                                emit_codes=False)
+        return y[:, :n].astype(jnp.result_type(xm.dtype, qw.dtype))
+    wq = B.dequantize(qw)
+    if not policy.enabled:
+        return jnp.matmul(xm, wq.astype(xm.dtype))
+    if policy.block_mode == "2d":
+        xq = _qdq(xm, policy.fwd_fmt, (policy.tile, policy.tile))
+    else:
+        xq = _qdq(xm, policy.fwd_fmt, (policy.block_1d,))
+    return jnp.matmul(xq, wq)
+
+
+def _jnp_packed_dx(policy: QuantPolicy, qw: B.QuantizedTensor, gm):
+    if policy.block_mode == "2d":
+        blk = (policy.tile, policy.tile)
+        gq = _qdq(gm, policy.bwd_fmt, blk) if policy.quantize_bwd else gm
+        return jnp.matmul(gq, B.dequantize(B.transpose_qt(qw)))
+    b = policy.block_1d
+    g_for_dx = (_qdq(gm, policy.bwd_fmt, (b,)) if policy.quantize_bwd
+                else gm)
+    w_re = _qdq(B.dequantize(qw), policy.fwd_fmt, (1, b))
+    return jnp.matmul(g_for_dx, w_re.T)
+
+
+def _pallas_packed_dx(policy: QuantPolicy, qw: B.QuantizedTensor, gm):
+    """dx against the resident store — the same shared dx halves as the
+    raw-weight backward, minus any dw work (packed weights are frozen)."""
+    m = gm.shape[0]
+    k, _ = qw.shape
+    gm = gm.astype(jnp.float32)
+    if policy.block_mode == "2d":
+        dx, _ = _pallas_dx_2d(policy, qw, gm)
+    else:
+        dx = _pallas_dx_1d(policy, qw, gm)
+    return dx[:m, :k]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mx_dot_packed(policy: QuantPolicy, x: jax.Array,
+                   qw: B.QuantizedTensor) -> jax.Array:
+    xm, lead = _flatten_lead(x)
+    y = _packed_fwd(policy, xm, qw)
+    return y.reshape(*lead, qw.shape[-1])
+
+
+def _mx_dot_packed_fwd(policy: QuantPolicy, x, qw):
+    # the residual IS the resident store: no activation codes are emitted
+    # (packed weights are frozen -> dw is a symbolic zero -> x is unused)
+    xm, lead = _flatten_lead(x)
+    y = _packed_fwd(policy, xm, qw)
+    return y.reshape(*lead, qw.shape[-1]), qw
+
+
+def _mx_dot_packed_bwd(policy: QuantPolicy, qw, g):
+    gm, lead = _flatten_lead(g)
+    k = qw.shape[0]
+    if policy.use_pallas and gm.shape[0] > 0 and gm.shape[1] > 0 and k > 0:
+        dx = _pallas_packed_dx(policy, qw, gm)
+    elif policy.enabled:
+        dx = _jnp_packed_dx(policy, qw, gm)
+    else:
+        dx = jnp.matmul(gm, B.dequantize(qw).astype(gm.dtype).T)
+    return (dx.reshape(*lead, k).astype(g.dtype), _qt_zero_cot(qw))
+
+
+_mx_dot_packed.defvjp(_mx_dot_packed_fwd, _mx_dot_packed_bwd)
+
+
+def mx_dot(x: jax.Array, w, policy: QuantPolicy) -> jax.Array:
+    """Quantized ``x @ w`` (x: (..., K), w: (K, N)) per the MX policy.
+
+    ``w`` may be a raw array (quantized per call) or a resident
+    ``blocking.QuantizedTensor`` from the pack-once store
+    (``core/packed_store.py``) — the packed path performs zero
+    weight-quantize dispatches and treats the weight as frozen (its
+    cotangent is a symbolic zero).
+    """
+    if isinstance(w, B.QuantizedTensor):
+        qw = _layer_qt(w)
+        _check_packed(policy, qw)
+        return _mx_dot_packed(policy, x, qw)
     if not policy.enabled:
         return jnp.matmul(x, w)
     return _mx_dot(policy, x, w)

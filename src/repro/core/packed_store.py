@@ -1,0 +1,140 @@
+"""Pack-once weight store: resident MXSF codes for serving and training.
+
+The paper's direct-cast story (and the OCP MX / MX+ deployments it builds
+on) treats the *packed* weight tensor as the serving format: weights are
+cast to MX once and the accelerator consumes codes thereafter.  This module
+is that cast.  ``pack_params`` walks a parameter pytree and replaces every
+matmul weight leaf with a ``blocking.QuantizedTensor`` — 1D row blocks
+``(block_1d, 1)`` along the contraction dim for inference policies, TxT
+tiles for training policies — quantized ONCE.  ``mx_dot`` then consumes the
+resident codes directly (zero weight-quantize dispatches per call, see
+``core/mx_dot.py``) and the full-precision originals can be dropped from
+device memory: an MXSF store is ~2x smaller than bf16 weights and ~4x
+smaller than f32 (1 code byte + 1/blk scale byte per element).
+
+Leaf selection is by name: the dict keys every matmul weight in
+``models/`` uses (attention/MLP projections, SSD in/out projections, the LM
+head).  Embedding tables stay in values (they are gathered, not
+matmul'ed), as do norms, biases, MoE routing and expert tensors (those run
+through ``mx_einsum``, which takes value-domain operands).  Stacked
+(scan-over-layers) leaves pack with the block on the trailing dims, so
+``lax.scan`` slices the codes exactly like it sliced the values.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocking as B
+from . import formats as F
+from .policy import QuantPolicy
+
+__all__ = ["PACKED_LEAF_NAMES", "packable_policy", "weight_block",
+           "pack_params", "unpack_params", "pack_leaf", "store_nbytes"]
+
+# dict keys of matmul-weight leaves (see models/blocks.py, models/ssd.py);
+# every one of them is consumed through blocks.dense -> mx_dot
+PACKED_LEAF_NAMES = frozenset({
+    "wq", "wk", "wv", "wo",           # attention projections
+    "wg", "wu", "wd",                 # MLP (and MoE shared-expert MLP)
+    "in_proj", "out_proj",            # SSD / Mamba2 projections
+    "head",                           # LM / classifier head
+})
+
+
+def packable_policy(policy: QuantPolicy) -> bool:
+    """Whether this policy has a packed form at all: quantization enabled
+    AND a real element format (bf16 passthrough has no codes)."""
+    return policy.enabled and F.get_format(policy.fwd_fmt).kind != "none"
+
+
+def weight_block(policy: QuantPolicy) -> Tuple[int, int]:
+    """The weight-side block the kernels consume (see mx_dot._pol_blocks):
+    rows along the contraction dim for 1D, square tiles for 2D."""
+    if policy.block_mode == "2d":
+        return (policy.tile, policy.tile)
+    return (policy.block_1d, 1)
+
+
+def pack_leaf(w: jax.Array, policy: QuantPolicy,
+              dtype=None) -> B.QuantizedTensor:
+    """Quantize one weight leaf into the policy's resident layout.
+
+    ``dtype`` is the cast-at-use compute dtype (``blocks.dense`` casts f32
+    master weights to the activation dtype before quantizing); packing
+    through the same cast keeps packed and per-call quantization
+    bit-identical.
+    """
+    if dtype is not None:
+        w = w.astype(jnp.dtype(dtype))
+    return B.quantize(w, policy.fwd_fmt, weight_block(policy))
+
+
+def _packable(leaf) -> bool:
+    return (not isinstance(leaf, B.QuantizedTensor)
+            and hasattr(leaf, "ndim") and leaf.ndim >= 2
+            and math.prod(leaf.shape) > 0)
+
+
+def pack_params(params, policy: QuantPolicy, dtype=None,
+                names=PACKED_LEAF_NAMES, exclude: Tuple[str, ...] = ()):
+    """Quantize the whole weight pytree once (idempotent on packed leaves).
+
+    ``exclude`` names dict subtrees to leave in values (e.g. ``("cross",)``
+    for encoder-decoder cross-attention weights, whose prefill path
+    consumes raw arrays).  Non-dict pytrees and unselected leaves pass
+    through untouched.
+    """
+    if not packable_policy(policy):
+        return params
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for key, val in node.items():
+            if key in exclude:
+                out[key] = val
+            elif isinstance(val, dict):
+                out[key] = walk(val)
+            elif key in names and _packable(val):
+                out[key] = pack_leaf(val, policy, dtype)
+            else:
+                out[key] = val
+        return out
+
+    return walk(params)
+
+
+def unpack_params(params):
+    """Dequantize every packed leaf back to values (tests / offline tools;
+    the serving path never calls this)."""
+    return jax.tree.map(
+        lambda leaf: B.dequantize(leaf)
+        if isinstance(leaf, B.QuantizedTensor) else leaf,
+        params, is_leaf=lambda leaf: isinstance(leaf, B.QuantizedTensor))
+
+
+def store_nbytes(params) -> dict:
+    """Memory accounting for a (possibly packed) param pytree.
+
+    Returns ``{"packed": bytes_of_packed_leaves, "value": bytes_of_value
+    _leaves, "total": ..., "value_f32": what the packed leaves would cost
+    in f32, "value_bf16": ... in bf16}`` — the ~4x / ~2x weight-footprint
+    story in one dict.
+    """
+    packed = value = f32 = bf16 = 0
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, B.QuantizedTensor)):
+        if isinstance(leaf, B.QuantizedTensor):
+            packed += leaf.nbytes_packed()
+            n = math.prod(leaf.shape)
+            f32 += n * 4
+            bf16 += n * 2
+        else:
+            value += leaf.size * jnp.dtype(leaf.dtype).itemsize
+    return {"packed": packed, "value": value, "total": packed + value,
+            "value_f32": f32, "value_bf16": bf16}

@@ -1,10 +1,22 @@
-"""Pallas TPU kernel: MXSF block quantization (the paper's MXSF Converter).
+"""Pallas TPU kernels: MXSF block quantization (the paper's MXSF Converter).
 
-Tiles the input over a (rows, cols) grid; each kernel invocation loads a
-(TM, TK) tile into VMEM, computes per-block shared exponents (block =
-``(bm, bk)`` elements, e.g. (1, 32) rows or (8, 8) training tiles), encodes
-every element into the MXSF byte, and writes the uint8 code tile plus the
-E8M0 scale tile.
+Two kernels share the converter body:
+
+  * ``mxsf_quantize_pallas`` — raw f32/bf16 in, codes + E8M0 scales out.
+    Tiles the input over a (rows, cols) grid; each kernel invocation loads
+    a (TM, TK) tile into VMEM, computes per-block shared exponents (block =
+    ``(bm, bk)`` elements, e.g. (1, 32) rows or (8, 8) training tiles),
+    encodes every element into the MXSF byte, and writes the uint8 code
+    tile plus the E8M0 scale tile.
+  * ``mxsf_requantize_pallas`` — *packed* codes + scales in, packed codes +
+    scales out under a different block orientation.  The decode (codes ×
+    2^S_e) and the re-encode both happen in VMEM, so re-blocking a resident
+    MXSF tensor (the Fig. 4a backward's "re-quantize along the transposed
+    contraction dim") moves 1-byte codes through HBM twice instead of the
+    dequantize→HBM→quantize double f32 roundtrip.  Bit-identical to
+    ``mxsf_quantize(dequantize(qt))`` by construction: the decode is the
+    same exp2i product ``blocking.dequantize`` uses and the encode is the
+    shared converter.
 
 MXU alignment: TK is a multiple of 128 (lane dim), TM a multiple of 8
 (sublane) — see BlockSpec choices in ``ops.py``.
@@ -17,27 +29,49 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import encode_mxsf, flog2, scale_by_exp2
+from .common import (broadcast_block_scale, decode_mxsf, encode_mxsf, exp2i,
+                     flog2, scale_by_exp2)
 
 SCALE_BIAS = 127
 
+# quantize/requantize dispatches seen at trace time: the counter lives in
+# the UNjitted wrapper so it ticks once per call site on every outer trace
+# (an inner-jit cache hit would otherwise hide the dispatch); tests assert
+# a packed-weight decode step traces ZERO of these (see trace_count(),
+# mirroring kernels/mxsf_attention.py)
+_TRACE_COUNT = 0
 
-def _quant_kernel(x_ref, codes_ref, scale_ref, *, bm: int, bk: int):
-    x = x_ref[...].astype(jnp.float32)
+
+def trace_count() -> int:
+    """Quantize-kernel dispatches recorded while tracing (or eagerly)."""
+    return _TRACE_COUNT
+
+
+def _encode_tile(x, bm: int, bk: int):
+    """The shared MXSF Converter body: f32 tile -> (codes, scale bytes).
+
+    Used by both the raw-input quantize kernel and the packed->packed
+    requantize kernel, so converter fixes (subnormal flog2, -0.0 signs, ...)
+    apply to both by construction.
+    """
     tm, tk = x.shape
     gm, gk = tm // bm, tk // bk
     # block max -> shared exponent
-    xb = jnp.abs(x).reshape(gm, bm, gk, bk)
-    amax = xb.max(axis=(1, 3))
+    amax = jnp.abs(x).reshape(gm, bm, gk, bk).max(axis=(1, 3))
     se = jnp.where(amax > 0, flog2(amax), -127)
     # scale each element by 2^-S_e and encode
-    se_el = jnp.broadcast_to(se[:, None, :, None], (gm, bm, gk, bk)).reshape(tm, tk)
+    se_el = broadcast_block_scale(se, bm, bk, tm, tk)
     xa = scale_by_exp2(x, -se_el)  # exact even for |S_e| > 126 (subnormal amax)
-    codes_ref[...] = encode_mxsf(xa)
-    scale_ref[...] = jnp.clip(se + SCALE_BIAS, 0, 255).astype(jnp.uint8)
+    codes = encode_mxsf(xa)
+    scales = jnp.clip(se + SCALE_BIAS, 0, 255).astype(jnp.uint8)
+    return codes, scales
 
 
-@functools.partial(jax.jit, static_argnames=("block", "tm", "tk", "interpret"))
+def _quant_kernel(x_ref, codes_ref, scale_ref, *, bm: int, bk: int):
+    codes_ref[...], scale_ref[...] = _encode_tile(
+        x_ref[...].astype(jnp.float32), bm, bk)
+
+
 def mxsf_quantize_pallas(x: jax.Array, *, block=(1, 32), tm: int = 256,
                          tk: int = 512, interpret: bool = False):
     """Quantize a 2D f32/bf16 array to MXSF codes + E8M0 scales.
@@ -45,6 +79,15 @@ def mxsf_quantize_pallas(x: jax.Array, *, block=(1, 32), tm: int = 256,
     Returns ``(codes[M, K] uint8, scales[M/bm, K/bk] uint8)``.
     Shapes must be multiples of the tile; ``ops.py`` handles padding.
     """
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+    return _mxsf_quantize_jit(x, block=tuple(block), tm=tm, tk=tk,
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tm", "tk", "interpret"))
+def _mxsf_quantize_jit(x: jax.Array, *, block, tm: int, tk: int,
+                       interpret: bool):
     m, k = x.shape
     bm, bk = block
     tm = min(tm, m)
@@ -68,3 +111,71 @@ def mxsf_quantize_pallas(x: jax.Array, *, block=(1, 32), tm: int = 256,
         interpret=interpret,
     )(x)
     return codes, scales
+
+
+def _requant_kernel(c_ref, s_ref, codes_ref, scale_ref, *, from_block,
+                    to_block):
+    tm, tk = c_ref.shape
+    # decode the resident codes in VMEM — same exp2i product as
+    # blocking.dequantize, so the value set is bit-identical
+    fse = s_ref[...].astype(jnp.int32) - SCALE_BIAS
+    x = decode_mxsf(c_ref[...]) * exp2i(
+        broadcast_block_scale(fse, *from_block, tm, tk))
+    # re-encode under the new block orientation (the shared converter body)
+    codes_ref[...], scale_ref[...] = _encode_tile(x, *to_block)
+
+
+def mxsf_requantize_pallas(codes: jax.Array, scales: jax.Array, *,
+                           from_block=(32, 1), to_block=(1, 32),
+                           tm: int = 256, tk: int = 512,
+                           interpret: bool = False):
+    """Re-block a packed MXSF tensor: codes+scales in, codes+scales out.
+
+    One dispatch, 1-byte traffic both ways — replaces the
+    ``dequantize`` → f32 HBM → ``quantize`` pair.  Returns
+    ``(codes[M, K], scales[M/bm', K/bk'])`` for ``to_block = (bm', bk')``.
+    Shapes must be multiples of the tile and of both blocks;
+    ``ops.mxsf_requantize`` handles padding.
+    """
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+    return _mxsf_requantize_jit(codes, scales, from_block=tuple(from_block),
+                                to_block=tuple(to_block), tm=tm, tk=tk,
+                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("from_block", "to_block", "tm",
+                                             "tk", "interpret"))
+def _mxsf_requantize_jit(codes: jax.Array, scales: jax.Array, *,
+                         from_block, to_block, tm: int, tk: int,
+                         interpret: bool):
+    m, k = codes.shape
+    tm = min(tm, m)
+    tk = min(tk, k)
+    assert m % tm == 0 and k % tk == 0, (m, k, tm, tk)
+    for bm, bk in (from_block, to_block):
+        assert tm % bm == 0 and tk % bk == 0, (tm, tk, from_block, to_block)
+    grid = (m // tm, k // tk)
+    kernel = functools.partial(_requant_kernel, from_block=tuple(from_block),
+                               to_block=tuple(to_block))
+    out_codes, out_scales = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j: (i, j)),
+            pl.BlockSpec((tm // from_block[0], tk // from_block[1]),
+                         lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j: (i, j)),
+            pl.BlockSpec((tm // to_block[0], tk // to_block[1]),
+                         lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.uint8),
+            jax.ShapeDtypeStruct((m // to_block[0], k // to_block[1]),
+                                 jnp.uint8),
+        ],
+        interpret=interpret,
+    )(codes, scales)
+    return out_codes, out_scales

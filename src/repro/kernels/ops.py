@@ -13,6 +13,7 @@ bitwise on the cropped region.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +21,7 @@ import jax.numpy as jnp
 from .mx_matmul import mxsf_matmul_pallas
 from .mxsf_attention import mxsf_flash_attention, per_row_scalar
 from .mxsf_fused_matmul import mxsf_fused_matmul_pallas
-from .mxsf_quant import mxsf_quantize_pallas
+from .mxsf_quant import mxsf_quantize_pallas, mxsf_requantize_pallas
 
 
 def _interpret() -> bool:
@@ -63,6 +64,34 @@ def mxsf_quantize(x: jax.Array, block=(1, 32), tm: int = 256, tk: int = 512):
                                          interpret=_interpret())
     mb, kb = _ceil_to(m, bm), _ceil_to(k, bk)
     return codes[:mb, :kb], scales[: mb // bm, : kb // bk]
+
+
+def mxsf_requantize(codes, scales, from_block=(32, 1), to_block=(1, 32),
+                    tm: int = 256, tk: int = 512):
+    """Re-block a packed MXSF tensor through the requantize kernel.
+
+    Input codes are the *from*-block-padded array ``blocking.quantize`` /
+    ``mxsf_quantize`` produce; the code grid itself is treated as the value
+    domain (padded entries are zero codes, which decode to 0.0 and never
+    raise a block amax).  Returns ``(codes, scales)`` cropped to the
+    ``to_block``-padded shape of the input code grid — bit-identical to
+    ``mxsf_quantize(dequantize(qt), to_block)`` on the overlap.
+    """
+    m, k = codes.shape
+    fbm, fbk = from_block
+    tbm, tbk = to_block
+    assert m % fbm == 0 and k % fbk == 0, (codes.shape, from_block)
+    bm = math.lcm(fbm, tbm)
+    bk = math.lcm(fbk, tbk)
+    tm, mp = _tile_for(m, tm, bm)
+    tk, kp = _tile_for(k, tk, bk)
+    c = _pad2d(codes, mp, kp)
+    s = _pad2d(scales, mp // fbm, kp // fbk)
+    oc, os_ = mxsf_requantize_pallas(c, s, from_block=tuple(from_block),
+                                     to_block=tuple(to_block), tm=tm, tk=tk,
+                                     interpret=_interpret())
+    mb, kb = _ceil_to(m, tbm), _ceil_to(k, tbk)
+    return oc[:mb, :kb], os_[: mb // tbm, : kb // tbk]
 
 
 def mxsf_matmul(x_codes, x_scales, w_codes, w_scales, xblk=(1, 32),

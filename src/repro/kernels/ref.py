@@ -12,6 +12,16 @@ def mxsf_quantize_ref(x, block=(1, 32)):
     return qt.codes, qt.scale_e8m0
 
 
+def mxsf_requantize_ref(codes, scales, from_block=(32, 1), to_block=(1, 32)):
+    """Oracle for mxsf_requantize_pallas: dequantize the code grid (treated
+    as the value domain), re-quantize under the new block orientation."""
+    m, k = codes.shape
+    qt = B.QuantizedTensor(codes, scales, "mxsf", tuple(from_block), (m, k),
+                           "float32")
+    out = B.quantize(B.dequantize(qt), "mxsf", tuple(to_block))
+    return out.codes, out.scale_e8m0
+
+
 def mxsf_matmul_ref(x_codes, x_scales, w_codes, w_scales, xblk, wblk):
     """Oracle for mxsf_matmul_pallas: dequantize both operands, f32 matmul."""
     m, k = x_codes.shape

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..core import sharding as shd
+from ..core.blocking import QuantizedTensor
 from ..core.mx_dot import mx_dot, mx_einsum, qdq_along
 from ..core.policy import QuantPolicy
 
@@ -26,7 +27,14 @@ def _dense_init(key, d_in, d_out, scale=None):
 
 
 def dense(x, w, policy):
-    """mx_dot with cast-at-use: f32 master weights -> activation dtype."""
+    """mx_dot with cast-at-use: f32 master weights -> activation dtype.
+
+    ``w`` may also be a resident packed weight (``QuantizedTensor``) from
+    the pack-once store — those were cast to the compute dtype at pack time
+    and mx_dot consumes the codes directly (zero weight-quantize
+    dispatches)."""
+    if isinstance(w, QuantizedTensor):
+        return mx_dot(x, w, policy)
     return mx_dot(x, w.astype(x.dtype), policy)
 
 

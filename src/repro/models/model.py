@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, ShapeConfig
+from ..core import packed_store
 from ..core.policy import QuantPolicy
 from . import decoding, transformer
 
@@ -21,6 +22,45 @@ forward = transformer.forward
 init_cache = decoding.init_cache
 decode_step = decoding.decode_step
 prefill = decoding.prefill
+pack_params = packed_store.pack_params          # generic pytree pass
+
+
+def pack_model_params(cfg: ModelConfig, params, policy: QuantPolicy,
+                      dtype=None):
+    """Quantize the model's weight pytree ONCE into the serving format.
+
+    On top of the generic ``core/packed_store.pack_params`` pass this
+    handles the model-level concerns:
+
+      * tied embeddings — injects a packed ``"head"`` (the transposed
+        table quantized at pack time) so the LM head takes the
+        zero-dispatch path while ``"emb"`` stays a gatherable value table;
+      * encoder-decoder cross-attention — left in values (its prefill
+        consumes raw ``wk``/``wv`` arrays when precomputing the cross KV);
+      * cast-at-use — leaves are cast to ``cfg.compute_dtype`` before
+        quantizing, matching ``blocks.dense``, so packed and per-call
+        quantization are bit-identical.
+
+    Idempotent: already-packed leaves pass through.
+    """
+    if not packed_store.packable_policy(policy):
+        return params  # incl. bf16-passthrough fwd formats: no packed form
+    dtype = jnp.dtype(cfg.compute_dtype) if dtype is None else jnp.dtype(dtype)
+    params = dict(params)
+    if cfg.tie_embeddings and "head" not in params and "emb" in params:
+        params["head"] = packed_store.pack_leaf(params["emb"].T, policy,
+                                                dtype)
+    exclude = ("cross",) if cfg.family == "encdec" else ()
+    return packed_store.pack_params(params, policy, dtype=dtype,
+                                    exclude=exclude)
+
+
+def packed_model_specs(cfg: ModelConfig, policy: QuantPolicy, dtype=None):
+    """Abstract packed-param structure (ShapeDtypeStructs + static MX
+    metadata) without materializing full-precision weights — the
+    ``ckpt.restore`` target for a packed checkpoint."""
+    return jax.eval_shape(lambda: pack_model_params(
+        cfg, init_params(jax.random.PRNGKey(0), cfg), policy, dtype))
 
 
 def decode_attn_backend(cfg: ModelConfig, policy: QuantPolicy) -> str:

@@ -188,7 +188,11 @@ def _embed_tokens(params, batch, cfg: ModelConfig):
 
 def _lm_head(params, x, cfg: ModelConfig, policy):
     x = blk.rmsnorm(params["final_norm"], x)
-    w = params["emb"].T if cfg.tie_embeddings else params["head"]
+    # tied configs normally project through emb.T; a packed store injects a
+    # pre-packed "head" (the transposed table quantized once at pack time,
+    # see model.pack_model_params) so the head also skips the per-call
+    # weight quantize
+    w = params["head"] if "head" in params else params["emb"].T
     logits = blk.dense(x, w, policy).astype(jnp.float32)
     if cfg.final_softcap:
         logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)

@@ -17,13 +17,15 @@ Tested against sequential generation in tests/test_serve_engine.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from collections import deque
+from typing import Callable, Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core import packed_store
 from ..core.policy import QuantPolicy
 from ..models import model as M
 
@@ -45,7 +47,8 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, policy: QuantPolicy,
                  slots: int = 4, max_len: int = 256,
                  sampler: Optional[Callable] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 pack_weights: Optional[bool] = None):
         if cfg.family != "decoder":
             raise NotImplementedError(
                 "continuous batching needs per-slot recurrent-state "
@@ -61,7 +64,22 @@ class ServeEngine:
         # 'jnp' = dequantize + mx_einsum (see models/model.py)
         self.attn_backend = M.decode_attn_backend(cfg, policy)
         self.cfg = cfg
+        # pack-once weight store (default for quantizing policies): the
+        # whole weight pytree is cast to resident MXSF codes HERE, so decode
+        # steps perform zero weight-quantize dispatches and the caller can
+        # drop the full-precision params — the store is ~2x smaller than
+        # bf16 weights, ~4x smaller than f32 (self.store_nbytes reports it)
+        can_pack = packed_store.packable_policy(policy)
+        if pack_weights and not can_pack:
+            raise ValueError(
+                "pack_weights=True needs a quantizing policy with a real "
+                f"element format; got block_mode={policy.block_mode!r}, "
+                f"fwd_fmt={policy.fwd_fmt!r}")
+        self.packed = can_pack and (pack_weights is None or pack_weights)
+        if self.packed:
+            params = M.pack_model_params(cfg, params, policy)
         self.params = params
+        self.store_nbytes = packed_store.store_nbytes(params)
         self.policy = policy
         self.slots = slots
         self.max_len = max_len
@@ -74,8 +92,10 @@ class ServeEngine:
                                   ring=False, kv_fmt=policy.kv_cache_fmt)
         self.pos = np.zeros(slots, np.int32)
         self.live: List[Optional[Request]] = [None] * slots
-        self.pending_prompt: List[List[int]] = [[] for _ in range(slots)]
-        self.queue: List[Request] = []
+        # deques: admission pops the queue head and prefill pops one prompt
+        # token per tick — list.pop(0) made both O(n) under heavy admission
+        self.pending_prompt: List[Deque[int]] = [deque() for _ in range(slots)]
+        self.queue: Deque[Request] = deque()
         self.last_tok = np.zeros(slots, np.int32)
         self._decode = jax.jit(
             lambda p, t, c, pos: M.decode_step(p, t, c, pos, cfg, policy))
@@ -116,10 +136,10 @@ class ServeEngine:
     def _admit(self):
         for s in range(self.slots):
             if self.live[s] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 self.live[s] = req
                 self.pos[s] = 0
-                self.pending_prompt[s] = list(req.prompt)
+                self.pending_prompt[s] = deque(req.prompt)
 
     def _tick(self) -> List[Request]:
         """One batched step: every slot consumes either its next prompt
@@ -128,7 +148,7 @@ class ServeEngine:
         prefilling = np.zeros(self.slots, bool)
         for s in range(self.slots):
             if self.live[s] is not None and self.pending_prompt[s]:
-                toks[s] = self.pending_prompt[s].pop(0)
+                toks[s] = self.pending_prompt[s].popleft()
                 prefilling[s] = True
         logits, self.cache = self._decode(
             self.params, jnp.asarray(toks)[:, None].astype(jnp.int32),

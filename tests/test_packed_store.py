@@ -1,0 +1,333 @@
+"""Pack-once weight store: resident-code mx_dot parity, packed->packed
+requantize kernel, zero weight-quantize decode, packed checkpointing.
+
+The contract under test: packing is invisible to the math.  ``mx_dot(x,
+packed_w)`` is BITWISE identical to ``mx_dot(x, w)`` on both layouts and
+both backends (the resident codes are exactly what the per-call path would
+have produced), while performing zero weight-quantize dispatches.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blocking as B
+from repro.core import packed_store as PS
+from repro.core.mx_dot import count_quant_passes, mx_dot
+from repro.core.policy import BF16, MXSF_INFER, QuantPolicy
+from repro.kernels import ops, ref
+
+P2D = QuantPolicy(block_mode="2d", tile=8)
+P1D = QuantPolicy(block_mode="1d", block_1d=32)
+slow = pytest.mark.slow
+
+
+def _rand(shape, scale_sigma=2.0, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape) * np.exp(
+        rng.standard_normal(shape) * scale_sigma)
+    return jnp.asarray(x.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# packed->packed requantize kernel (the Fig. 4a re-block without the f32
+# HBM roundtrip); Fig. 4 pass counts for the path it serves are asserted
+# in test_fused_kernel.py::test_mx_dot_pallas_pass_accounting (1D=6, 2D=3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mk", [(64, 96), (40, 50), pytest.param((17, 70),
+                                                                 marks=slow)])
+@pytest.mark.parametrize("fb,tb", [((32, 1), (1, 32)), ((1, 32), (32, 1)),
+                                   pytest.param((8, 8), (1, 8),
+                                                marks=slow)])
+def test_requantize_kernel_bitexact(mk, fb, tb):
+    qt = B.quantize(_rand(mk, seed=1), "mxsf", fb)
+    oc, os_ = ops.mxsf_requantize(qt.codes, qt.scale_e8m0, fb, tb)
+    rc, rs = ref.mxsf_requantize_ref(qt.codes, qt.scale_e8m0, fb, tb)
+    np.testing.assert_array_equal(np.asarray(oc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(os_), np.asarray(rs))
+
+
+def test_requantize_kernel_edge_inputs():
+    """Zeros, subnormal blocks, S_e=127 blocks survive the re-block."""
+    rows = np.stack([
+        np.zeros(64, np.float32),
+        np.full(64, 1e-40, np.float32),
+        np.full(64, 3.0e38, np.float32),
+        np.where(np.arange(64) % 2, 2.0 ** -130, 1.0).astype(np.float32),
+    ])
+    qt = B.quantize(jnp.asarray(rows), "mxsf", (1, 32))
+    oc, os_ = ops.mxsf_requantize(qt.codes, qt.scale_e8m0, (1, 32), (32, 1))
+    rc, rs = ref.mxsf_requantize_ref(qt.codes, qt.scale_e8m0, (1, 32),
+                                     (32, 1))
+    np.testing.assert_array_equal(np.asarray(oc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(os_), np.asarray(rs))
+
+
+# ---------------------------------------------------------------------------
+# mx_dot packed-weight parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("pol", [P1D, P2D], ids=["1d", "2d"])
+@pytest.mark.parametrize("shapes", [((4, 16, 64), (64, 32)),
+                                    ((3, 10, 50), (50, 24))],
+                         ids=["aligned", "non-aligned"])
+def test_mx_dot_packed_bitwise(pol, backend, shapes):
+    """mx_dot(x, packed_w) == mx_dot(x, w) bitwise, layouts x backends,
+    including shapes that divide neither blocks nor kernel tiles."""
+    pol = pol.replace(backend=backend)
+    x, w = _rand(shapes[0], seed=10), _rand(shapes[1], seed=11)
+    qw = PS.pack_leaf(w, pol)
+    y_raw = mx_dot(x, w, pol)
+    y_pk = mx_dot(x, qw, pol)
+    np.testing.assert_array_equal(np.asarray(y_raw), np.asarray(y_pk))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("pol", [P1D, P2D, P1D.replace(quantize_bwd=False)],
+                         ids=["1d", "2d", "1d-nobwd"])
+def test_mx_dot_packed_grads_match(pol, backend):
+    """d/dx through the resident codes matches the per-call path; the
+    packed weight itself is frozen (symbolic-zero cotangent)."""
+    pol = pol.replace(backend=backend)
+    x, w = _rand((4, 16, 64), seed=12), _rand((64, 32), seed=13)
+    qw = PS.pack_leaf(w, pol)
+    g_raw = jax.grad(lambda x: (mx_dot(x, w, pol) ** 2).sum())(x)
+    g_pk = jax.grad(lambda x: (mx_dot(x, qw, pol) ** 2).sum())(x)
+    np.testing.assert_allclose(
+        np.asarray(g_raw), np.asarray(g_pk), rtol=1e-5,
+        atol=float(np.abs(np.asarray(g_raw)).max()) * 1e-6)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("pol,expect", [(P1D, 3), (P2D, 2)],
+                         ids=["1d", "2d"])
+def test_packed_pass_accounting(pol, expect, backend):
+    """Resident codes drop the Fig. 4 weight passes: 1D 6->3 (x fwd, w
+    re-block, g), 2D 3->2 (x fwd, g) — dw is never computed."""
+    pol = pol.replace(backend=backend)
+    x, w = _rand((4, 16, 64), seed=14), _rand((64, 32), seed=15)
+    qw = PS.pack_leaf(w, pol)
+    with count_quant_passes() as c:
+        jax.grad(lambda x: (mx_dot(x, qw, pol) ** 2).sum())(x)
+    assert c["n"] == expect
+
+
+def test_packed_layout_mismatch_rejected():
+    qw = PS.pack_leaf(_rand((64, 32), seed=16), P1D)
+    with pytest.raises(ValueError, match="block"):
+        mx_dot(_rand((4, 64), seed=17), qw, P2D)
+    with pytest.raises(ValueError, match="format"):
+        mx_dot(_rand((4, 64), seed=17), qw,
+               P1D.replace(fwd_fmt="mxfp8_e4m3"))
+
+
+def test_packed_disabled_policy_dequantizes():
+    """A packed weight under a disabled policy is a plain (dequantized)
+    matmul — weights cannot be un-quantized, but the call still works."""
+    w = _rand((64, 32), seed=18)
+    qw = PS.pack_leaf(w, P1D)
+    y = mx_dot(_rand((4, 64), seed=19), qw, BF16)
+    yd = jnp.matmul(_rand((4, 64), seed=19), B.dequantize(qw))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yd))
+
+
+# ---------------------------------------------------------------------------
+# pack_params structure
+# ---------------------------------------------------------------------------
+
+def test_pack_params_selects_matmul_weights():
+    from repro.configs.base import get_config
+    from repro.models import model as M
+    cfg = get_config("qwen2.5-32b").reduced().replace(
+        compute_dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    packed = M.pack_model_params(cfg, params, P1D)
+    sub = packed["layers"]["sub0"]
+    for k in ("wq", "wk", "wv", "wo"):
+        assert isinstance(sub["attn"][k], B.QuantizedTensor), k
+        # stacked leaf: block on the trailing dims, lead dim scan-sliceable
+        assert sub["attn"][k].codes.ndim == 3
+    assert isinstance(packed["head"], B.QuantizedTensor)
+    # norms / embeddings stay in values
+    assert not isinstance(sub["ln1"]["w"], B.QuantizedTensor)
+    assert not isinstance(packed["emb"], B.QuantizedTensor)
+    # idempotent
+    repacked = M.pack_model_params(cfg, packed, P1D)
+    assert repacked["head"] is packed["head"]
+    # memory math: packed leaves cost ~(1 + 1/blk)/4 of their f32 form
+    nb = PS.store_nbytes(packed)
+    assert nb["packed"] < 0.3 * nb["value_f32"]
+    # unpack roundtrip decodes to the qdq'd values
+    unpacked = PS.unpack_params(packed)
+    qdq_w = B.qdq(params["layers"]["sub0"]["attn"]["wq"], "mxsf",
+                  PS.weight_block(P1D))
+    np.testing.assert_array_equal(
+        np.asarray(unpacked["layers"]["sub0"]["attn"]["wq"]),
+        np.asarray(qdq_w))
+
+
+def test_pack_params_disabled_or_valueless_is_noop():
+    params = {"wq": _rand((8, 8), seed=30), "b": _rand((8,), seed=31)}
+    assert PS.pack_params(params, BF16) is params
+    out = PS.pack_params(params, P1D, exclude=("wq",))
+    assert not isinstance(out["wq"], B.QuantizedTensor)
+    # enabled policy with a passthrough element format has no packed form:
+    # a no-op everywhere, including the tied-head injection (gemma2-style
+    # configs used to crash pack_leaf on the injected emb.T)
+    passthrough = P1D.replace(fwd_fmt="bf16", quantize_bwd=False)
+    assert not PS.packable_policy(passthrough)
+    assert PS.pack_params(params, passthrough) is params
+    from repro.configs.base import get_config
+    from repro.models import model as M
+    cfg = get_config("gemma2-2b").reduced()
+    tied_params = {"emb": _rand((16, 8), seed=32)}
+    assert M.pack_model_params(cfg, tied_params, passthrough) is tied_params
+
+
+def test_serve_engine_rejects_impossible_pack_request():
+    from repro.configs.base import get_config
+    from repro.models import model as M
+    from repro.serve.engine import ServeEngine
+    cfg = get_config("qwen2.5-32b").reduced().replace(
+        compute_dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="pack_weights"):
+        ServeEngine(cfg, params, BF16, slots=2, max_len=16,
+                    pack_weights=True)
+
+
+# ---------------------------------------------------------------------------
+# zero weight-quantize dispatches in steady-state decode (trace-counted,
+# mirroring kernels/mxsf_attention.trace_count from the PR-2 tests)
+# ---------------------------------------------------------------------------
+
+def test_decode_zero_weight_quantize_dispatches():
+    from repro.configs.base import get_config
+    from repro.kernels import mxsf_quant as MQ
+    from repro.models import model as M
+    cfg = get_config("qwen2.5-32b").reduced().replace(
+        compute_dtype="float32")
+    pol = MXSF_INFER.replace(block_1d=16, kv_cache_fmt="mxsf",
+                             backend="pallas")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    packed = M.pack_model_params(cfg, params, pol)
+    # B=3 / W=24: shapes no other test traces, so this test neither warms
+    # nor reuses the attention kernel's jit cache (test_serve_engine
+    # asserts exact compile counts on its own shapes)
+    cache = M.init_cache(cfg, 3, 24, dtype=jnp.float32, ring=False,
+                         kv_fmt="mxsf")
+    toks = jnp.zeros((3, 1), jnp.int32)
+    pos = jnp.zeros((3,), jnp.int32)
+
+    def dispatches(p):
+        jaxpr = jax.make_jaxpr(
+            lambda p_, t, c, po: M.decode_step(p_, t, c, po, cfg, pol))(
+            p, toks, cache, pos)
+        return str(jaxpr).count("pallas_call")
+
+    t0 = MQ.trace_count()
+    d_packed = dispatches(packed)
+    assert MQ.trace_count() == t0, \
+        "packed decode traced a weight-quantize kernel"
+    t0 = MQ.trace_count()
+    d_raw = dispatches(params)
+    n_linear_quant = MQ.trace_count() - t0
+    # the raw path re-quantizes at every linear call site, each one a whole
+    # extra kernel dispatch per decode step; the packed graph is strictly
+    # smaller (the jaxpr printer shares identical sub-jaxprs, so the string
+    # count is a lower bound on runtime dispatches — the call-site counter
+    # is the exact per-step number)
+    assert n_linear_quant > 0
+    assert d_packed < d_raw
+
+
+# ---------------------------------------------------------------------------
+# packed checkpoint: save -> restore -> decode is bitwise identical
+# ---------------------------------------------------------------------------
+
+def test_packed_ckpt_restore_decode_identical(tmp_path):
+    from repro.configs.base import get_config
+    from repro.ckpt import ckpt
+    from repro.models import model as M
+    cfg = get_config("qwen2.5-32b").reduced().replace(
+        compute_dtype="float32")
+    pol = MXSF_INFER.replace(block_1d=16)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    packed = M.pack_model_params(cfg, params, pol)
+    ckpt.save(str(tmp_path), 7, packed)
+
+    # the restore target comes from eval_shape: full-precision weights are
+    # never materialized on the serving host
+    specs = M.packed_model_specs(cfg, pol)
+    restored, step = ckpt.restore(str(tmp_path), specs)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(packed), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    cache = M.init_cache(cfg, 1, 8, dtype=jnp.float32, ring=False)
+    toks = jnp.zeros((1, 1), jnp.int32)
+    pos = jnp.zeros((1,), jnp.int32)
+    l_pack, _ = M.decode_step(packed, toks, cache, pos, cfg, pol)
+    l_rest, _ = M.decode_step(restored, toks, cache, pos, cfg, pol)
+    np.testing.assert_array_equal(np.asarray(l_pack), np.asarray(l_rest))
+
+    # metadata guard: restoring under a different block layout is refused
+    with pytest.raises(ValueError, match="metadata mismatch"):
+        ckpt.restore(str(tmp_path),
+                     M.packed_model_specs(cfg, pol.replace(block_1d=32)))
+    # ... and so is a target that treats saved packed leaves as unpacked
+    # (it would silently compute with different numerics otherwise)
+    with pytest.raises(ValueError, match="treats as unpacked"):
+        ckpt.restore(str(tmp_path), jax.eval_shape(
+            lambda: M.init_params(jax.random.PRNGKey(0), cfg)))
+
+
+# ---------------------------------------------------------------------------
+# serving: the engine packs at construction and stays token-identical
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_packs_and_matches_unpacked():
+    from repro.configs.base import get_config
+    from repro.models import model as M
+    from repro.serve.engine import ServeEngine
+    cfg = get_config("qwen2.5-32b").reduced().replace(
+        compute_dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    pol = MXSF_INFER.replace(block_1d=16)
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab, size=n)) for n in (3, 5, 2)]
+    outs = []
+    for pack in (False, True):
+        eng = ServeEngine(cfg, params, pol, slots=2, max_len=16,
+                          pack_weights=pack)
+        assert eng.packed == pack
+        reqs = [eng.submit(p, 3) for p in prompts]
+        eng.run()
+        outs.append([r.out for r in reqs])
+    assert outs[0] == outs[1]
+    # the packed store really is resident in the engine's params
+    assert isinstance(eng.params["layers"]["sub0"]["attn"]["wq"],
+                      B.QuantizedTensor)
+    assert eng.store_nbytes["packed"] < eng.store_nbytes["value_f32"] / 3
+
+
+@slow
+def test_tied_head_injection_bitwise():
+    """gemma2 (tied embeddings): the injected packed head is bitwise
+    identical to projecting through emb.T."""
+    from repro.configs.base import get_config
+    from repro.models import model as M
+    cfg = get_config("gemma2-2b").reduced().replace(compute_dtype="float32")
+    pol = MXSF_INFER.replace(block_1d=16)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    packed = M.pack_model_params(cfg, params, pol)
+    assert "head" not in params and isinstance(packed["head"],
+                                               B.QuantizedTensor)
+    cache = M.init_cache(cfg, 1, 8, dtype=jnp.float32, ring=False)
+    toks = jnp.zeros((1, 1), jnp.int32)
+    pos = jnp.zeros((1,), jnp.int32)
+    l_raw, _ = M.decode_step(params, toks, cache, pos, cfg, pol)
+    l_pk, _ = M.decode_step(packed, toks, cache, pos, cfg, pol)
+    np.testing.assert_array_equal(np.asarray(l_raw), np.asarray(l_pk))
