@@ -215,6 +215,59 @@ def run():
          f"1_fused_dispatch,hbm={hbm_ker}<{hbm_deq}"
          f"({hbm_deq / hbm_ker:.1f}x_less_cache_traffic_per_decoded_token)")
 
+    # ---- chunked prefill: ceil(P/C) prompt dispatches vs P ---------------
+    # The serving engine's prompt phase (serve/engine.py): token-by-token
+    # prefill pays one full model dispatch per prompt token — every weight
+    # byte streams from HBM P times before the first generated token.
+    # Chunked prefill (prefill_step, C tokens/dispatch) reads the resident
+    # packed store once per CHUNK, so weight-side HBM traffic per prompt
+    # token drops by ~C (and dispatch latency overhead with it).
+    from repro.configs.base import get_config
+    from repro.core.policy import MXSF_INFER
+    from repro.models import model as M
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config("qwen2.5-32b").reduced().replace(compute_dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    pol_kv = MXSF_INFER.replace(block_1d=16, kv_cache_fmt="mxsf")
+    P, C, max_new = 12, 4, 2
+    prompt = list(rng.integers(0, cfg.vocab, size=P))
+
+    def serve(chunk):
+        eng = ServeEngine(cfg, params, pol_kv, slots=2, max_len=16,
+                          prefill_chunk=chunk)
+        req = eng.submit(prompt, max_new)
+        # warmup=0: an engine drains on its first run() — a warmed-up call
+        # would time an empty queue (includes jit compile; informational)
+        us, _ = time_call(lambda: eng.run(), iters=1, warmup=0)
+        return eng, req, us
+
+    eng_t, req_t, us_t = serve(1)
+    eng_c, req_c, us_c = serve(C)
+    d_tok, d_chk = eng_t.prefill_dispatches, eng_c.prefill_dispatches
+    # weight-side HBM bytes per prompt token: the packed store streams once
+    # per prefill dispatch (activation/cache traffic is identical per token)
+    store = eng_t.store_nbytes["total"]
+    hbm_tok = store * d_tok // P
+    hbm_chk = store * d_chk // P
+    emit("kernel_prefill_tokstep_dispatches", 0.0, f"P={P}",
+         dispatches=d_tok)
+    emit("kernel_prefill_chunked_dispatches", 0.0, f"P={P},C={C}",
+         dispatches=d_chk)
+    emit("kernel_prefill_tokstep_weight_hbm_bytes_per_prompt_tok", 0.0,
+         str(hbm_tok), hbm_bytes=hbm_tok)
+    emit("kernel_prefill_chunked_weight_hbm_bytes_per_prompt_tok", 0.0,
+         str(hbm_chk), hbm_bytes=hbm_chk)
+    assert d_tok == P and d_chk == -(-P // C) and hbm_chk < hbm_tok
+    assert req_c.out == req_t.out  # token-for-token across schedules
+    emit("kernel_prefill_tokstep_interp", us_t, "")
+    emit("kernel_prefill_chunked_interp", us_c,
+         f"tokens_equal_tokstep={req_c.out == req_t.out}")
+    emit("kernel_prefill_chunked_below_tokstep", 0.0,
+         f"dispatches={d_chk}<{d_tok},weight_hbm/tok={hbm_chk}<{hbm_tok}"
+         f"({hbm_tok / hbm_chk:.1f}x_less_weight_traffic_per_prompt_token)",
+         dispatches=d_chk, hbm_bytes=hbm_chk)
+
     # structural roofline of the dequant-matmul (TPU v5e targets).
     # With a TM x TN output tile resident in VMEM and K streamed, HBM bytes
     # per tile ~ (TM + TN) * K of 1-byte codes (+ scales/32), so

@@ -44,6 +44,15 @@ re-blocks it with the requantize kernel, and no activation residual is
 emitted at all because packed weights are frozen — their cotangent is
 symbolically zero (float0), so ``dw`` is never computed.  Pass accounting
 with a packed weight: 1D = 3 (x fwd, w re-block, g), 2D = 2 (x fwd, g).
+
+Trace stability under serving shapes: ``mx_dot`` flattens every leading
+dim into rows (``(B, S, K) -> (B*S, K)``), so the serving engine's two
+entry points each hit exactly one compilation — decode steps are ``B*1``
+rows and prefill chunks are ``B*C`` rows with C *static* (the engine pads
+the final partial chunk to C and masks, rather than tracing a fresh kernel
+per ragged chunk length).  1D activation row-blocks run along K, so a
+chunk's C rows quantize exactly like C separate single-token calls —
+chunked and token-by-token prefill are bit-identical through the linears.
 """
 from __future__ import annotations
 

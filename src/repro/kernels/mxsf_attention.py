@@ -6,6 +6,12 @@ VMEM per tile, the S x L score matrix never exists, and HBM reads of the
 cache are 1 byte/element (+1/dh scale). This is the SAFE-MAC dataflow
 (decode feeding the MAC array) mapped onto MXU tiles.
 
+Both serving phases run through it: S=1 decode steps and S=C prefill
+chunks (serve/engine.py chunked prefill) — the q-side grid tiles S into
+Cq-row query blocks, and the same ``q_offset``-anchored causal mask covers
+chunk-internal causality (query at absolute position p sees keys <= p,
+including the chunk rows written just before it).
+
 Layout:
   q        : (BH, S, dh)  bf16/f32 — one row per (batch x q-head)
   k/v codes: (BKV, L, dh) uint8    — one row per (batch x kv-head)

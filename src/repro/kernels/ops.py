@@ -158,14 +158,16 @@ def mxsf_fused_matmul(x, w_codes, w_scales, xblk=(1, 32), wblk=(32, 1),
 def mxsf_attention(q, k_codes, k_scales, v_codes, v_scales, *, causal=True,
                    cq: int = 256, ck: int = 256, kv_len=None, q_offset=None,
                    window=None):
-    """Flash attention over an MXSF-packed KV cache (serving hot path).
+    """Flash attention over an MXSF-packed KV cache (serving hot path:
+    S=1 decode steps and S=C prefill chunks alike).
 
     Accepts any (S, L): pads queries/cache up to chunk multiples (zero codes
-    decode to 0.0 and padded cache columns sit beyond ``kv_len``, so they
-    never contribute) and crops the output back to (BH, S, dh).  K/V may be
-    in row layout (BKV, L, dh) or cache layout (B, L, kv, dh) — see
-    ``mxsf_flash_attention``.  ``kv_len``/``q_offset``/``window`` are
-    dynamic per-row scalars; a growing decode cache reuses one compile.
+    decode to 0.0, padded cache columns sit beyond ``kv_len``, and padded
+    query rows are cropped before anyone reads them) and crops the output
+    back to (BH, S, dh).  K/V may be in row layout (BKV, L, dh) or cache
+    layout (B, L, kv, dh) — see ``mxsf_flash_attention``.  ``kv_len``/
+    ``q_offset``/``window`` are dynamic per-row scalars; a growing decode
+    cache — or a prefill chunk at any position — reuses one compile.
     """
     BH, S, dh = q.shape
     L = k_codes.shape[1]

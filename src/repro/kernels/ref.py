@@ -64,9 +64,24 @@ def mxsf_flash_attention_ref(q, k_codes, k_scales, v_codes, v_scales,
     ``kv_len``/``q_offset``/``window`` mirror the kernel's per-row dynamic
     scalars (python int, scalar, or (BH,) array); fully-masked rows return 0
     (not a uniform average) — same contract as the kernel's masked-tile fix.
+    Accepts both kernel operand layouts: row layout (BKV, L, dh)/(BKV, L)
+    and the KV-cache pytree layout (B, L, kv, dh)/(B, L, kv, 1), adapted
+    here exactly like ``models/decoding.py::kv_cache_rows`` so prefill/
+    decode tests can feed the cache buffers straight to the oracle.
     """
     from .mxsf_attention import NO_WINDOW, per_row_scalar
     BH, S, dh = q.shape
+    if k_codes.ndim == 4:  # cache layout -> (batch x kv-head) rows
+        Bc, L, KV, _ = k_codes.shape
+
+        def rows(c):
+            return c.transpose(0, 2, 1, 3).reshape(Bc * KV, L, dh)
+
+        def srows(s):
+            return s[..., 0].transpose(0, 2, 1).reshape(Bc * KV, L)
+
+        k_codes, k_scales = rows(k_codes), srows(k_scales)
+        v_codes, v_scales = rows(v_codes), srows(v_scales)
     BKV, L, _ = k_codes.shape
     g = BH // BKV
     kvl = jnp.minimum(per_row_scalar(kv_len, L, BH), L)[:, 0]

@@ -121,11 +121,12 @@ def _attn_mask_bias(qpos, kpos, *, causal: bool, window: Optional[int]):
 def attn_kernel_eligible(cfg: ModelConfig, policy: QuantPolicy) -> bool:
     """Static (cfg x policy) half of the packed-attention kernel gate.
 
-    The dynamic half — single-token decode, self-attention, causal — is
-    checked at the call site in ``attention``.  Softcap and SWA patterns
-    fall back: the kernel applies neither tanh capping nor the ring-aware
-    slot->position window math (window-free causal decode stays correct
-    under ring wrap because ``kv_len`` clamps to the cache width).
+    The dynamic half — cached causal self-attention (S=1 decode steps and
+    S=C prefill chunks alike) — is checked at the call site in
+    ``attention``.  Softcap and SWA patterns fall back: the kernel applies
+    neither tanh capping nor the ring-aware slot->position window math
+    (window-free causal decode stays correct under ring wrap because
+    ``kv_len`` clamps to the cache width).
     ``models/model.py::decode_attn_backend`` reports this same predicate.
     """
     return (policy.use_pallas_attention and not cfg.attn_softcap
@@ -134,13 +135,20 @@ def attn_kernel_eligible(cfg: ModelConfig, policy: QuantPolicy) -> bool:
 
 def attention(p, x, cfg: ModelConfig, policy: QuantPolicy, *,
               positions=None, kv_positions=None, kv_x=None, kv_cached=None,
-              causal=True, window=None, cache=None, cache_pos=None):
+              causal=True, window=None, cache=None, cache_pos=None,
+              cache_write_len=None):
     """Generalized attention.
 
     * self-attention train/prefill: ``kv_x=None, cache=None``
     * cross-attention: ``kv_x`` = encoder states (positions ignored for rope)
     * cross-attention decode: ``kv_cached`` = precomputed (k, v) dict
     * decode: ``cache`` = {k, v} ring/full buffers, ``cache_pos`` scalar step
+    * chunked prefill: ``cache_pos`` a (B,) vector, ``cache_write_len`` a
+      (B,) count of valid tokens in this S-token chunk — only cache columns
+      ``pos..pos+len-1`` are written (rows past ``len`` are dropped, so a
+      slot with ``len=0`` leaves its cache untouched; padded chunk tails and
+      masked-out batch slots never corrupt neighbouring columns).  Queries
+      past ``len`` produce garbage rows the caller must ignore.
     Returns (out, new_cache).
     """
     B, S, _ = x.shape
@@ -187,12 +195,40 @@ def attention(p, x, cfg: ModelConfig, policy: QuantPolicy, *,
         W = (cache["k_codes"] if "k_codes" in cache else cache["k"]).shape[1]
         slot = pos_vec % W
 
-        def _write(buf, upd):
-            return jax.vmap(
-                lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0))
-            )(buf, upd, slot)
+        if cache_write_len is None:
+            def _write(buf, upd):
+                return jax.vmap(
+                    lambda c, u, p: jax.lax.dynamic_update_slice(c, u,
+                                                                 (p, 0, 0))
+                )(buf, upd, slot)
+        else:
+            # masked chunk write (prefill): scatter rows 0..len-1 onto
+            # columns slot..slot+len-1; rows past len target column W and
+            # are dropped, so padded chunk tails and len=0 slots leave the
+            # cache bit-identical.  Non-wrapping like the slice path —
+            # dynamic_update_slice would CLAMP an overhanging start and
+            # silently shift the chunk onto live history columns, which is
+            # exactly what a masked-out slot deep in its sequence would hit.
+            wl = jnp.broadcast_to(jnp.asarray(cache_write_len, jnp.int32),
+                                  (B,))
+            cols = slot[:, None] + jnp.arange(S)[None, :]
+            cols = jnp.where(jnp.arange(S)[None, :] < wl[:, None], cols, W)
 
-        end = pos_vec + S - 1                       # (B,)
+            def _write(buf, upd):
+                return jax.vmap(
+                    lambda c, u, cc: c.at[cc].set(u, mode="drop")
+                )(buf, upd, cols)
+
+        # last absolute position actually WRITTEN this call: all S rows on
+        # the slice path, only write_len on the masked-chunk path — counting
+        # a partial chunk's padded tail here would push ``end`` past the
+        # cache width and the ring math below would relabel the earliest
+        # columns as future positions, causally masking real history away
+        # from the chunk's valid queries
+        if cache_write_len is None:
+            end = pos_vec + S - 1                   # (B,)
+        else:
+            end = pos_vec + wl - 1                  # wl=0 -> pos-1: no-op
         idx = jnp.arange(W)
         # absolute position held by each ring slot (unwritten slots < 0)
         kpos = end[:, None] - ((end[:, None] - idx[None, :]) % W)
@@ -209,11 +245,14 @@ def attention(p, x, cfg: ModelConfig, policy: QuantPolicy, *,
             new_cache[f"{nm}_codes"] = _write(cache[f"{nm}_codes"], qt.codes)
             new_cache[f"{nm}_scales"] = _write(cache[f"{nm}_scales"],
                                                qt.scale_e8m0)
-        if (attn_kernel_eligible(cfg, policy) and S == 1 and kv_x is None
-                and causal):
-            # single-token decode through the flash kernel: it reads the
-            # 1-byte codes directly — no value-domain cache and no S x L
-            # score matrix in HBM
+        if attn_kernel_eligible(cfg, policy) and kv_x is None and causal:
+            # cached causal self-attention through the flash kernel — S=1
+            # decode steps AND S=C prefill chunks: it reads the 1-byte codes
+            # directly, so no value-domain cache and no S x L score matrix
+            # in HBM.  Chunk-internal causality rides the kernel's absolute
+            # qpos/kpos comparison (q_offset = pos_vec), which also keeps
+            # valid queries off any unwritten tail columns of a partial
+            # chunk (kpos <= qpos < pos + write_len).
             return _attend_packed(q, new_cache, pos_vec, window, p, cfg,
                                   policy), new_cache
         kc, vc = new_cache["k_codes"], new_cache["v_codes"]
@@ -245,7 +284,8 @@ def attention(p, x, cfg: ModelConfig, policy: QuantPolicy, *,
 
 def _attend_packed(q, cache, pos_vec, window, p, cfg: ModelConfig,
                    policy: QuantPolicy):
-    """Decode-step attention consuming the packed MXSF cache directly.
+    """Cached attention consuming the packed MXSF cache directly — S=1
+    decode steps and S=C prefill chunks (the q-side grid tiles over S).
 
     Routes through ``kernels/ops.py::mxsf_attention`` (SAFE-MAC dataflow:
     E8M0-scaled codes decoded at the MAC array).  q is 1D-quantized along dh
@@ -254,7 +294,8 @@ def _attend_packed(q, cache, pos_vec, window, p, cfg: ModelConfig,
     one documented divergence from the jnp emulation, which re-quantizes the
     normalized probs before the V matmul).  ``kv_len``/``q_offset``/
     ``window`` ride as dynamic per-row scalars, so a growing cache never
-    recompiles the kernel.
+    recompiles the kernel — and neither does a prefill chunk whose valid
+    length varies (the chunk is padded to a fixed C upstream).
     """
     from ..kernels import ops as kops
     B, S, h, dh = q.shape

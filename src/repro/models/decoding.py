@@ -1,4 +1,10 @@
-"""KV/SSM-state caches, prefill and single-token decode for every family.
+"""KV/SSM-state caches, prefill (whole-prompt and chunked) and decode.
+
+Three cached entry points share one decoder forward (``_decoder_forward``):
+``prefill`` runs the whole prompt from position 0 (lockstep batches),
+``prefill_step`` runs one C-token chunk at dynamic per-slot positions with
+masked cache writes (continuous batching, serve/engine.py), and
+``decode_step`` runs one token.
 
 Cache layouts (stacked over layers for ``lax.scan``):
   * decoder : k/v ring buffers (n_super, moe_every, B, W, kv, dh); W is the
@@ -21,7 +27,8 @@ from . import ssd
 from .transformer import (NO_WINDOW, _apply_ffn, _hybrid_split, _layer_windows,
                           _lm_head, _sinusoid_pos, encode)
 
-__all__ = ["init_cache", "decode_step", "prefill", "kv_cache_rows"]
+__all__ = ["init_cache", "decode_step", "prefill_step", "prefill",
+           "kv_cache_rows"]
 
 
 def kv_cache_rows(cache):
@@ -113,6 +120,52 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
 # decode step
 # ---------------------------------------------------------------------------
 
+def _decoder_forward(params, tokens, cache, pos, cfg: ModelConfig,
+                     policy: QuantPolicy, write_len=None):
+    """Shared decoder-family cached forward over an S-token slice.
+
+    tokens: (B, S) int32; pos: scalar or (B,) start positions.
+    ``write_len`` (None or (B,)): per-slot count of valid tokens — only
+    cache columns ``pos..pos+write_len-1`` are written (see
+    ``blocks.attention``); None writes all S.  Returns the FULL per-position
+    logits (B, S, vocab) plus the new cache — ``decode_step`` (S=1) and
+    ``prefill_step`` (S=C) pick their position out of it.
+    """
+    x = params["emb"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.name.startswith("gemma2"):
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    pos_eff = pos + cfg.frontend_tokens  # VLM prefix occupies slots 0..T-1
+    n_super = cfg.n_layers // cfg.moe_every
+    windows = _layer_windows(cfg, cfg.n_layers).reshape(n_super,
+                                                        cfg.moe_every)
+
+    def body(x, inp):
+        lp, c, win = inp
+        outs = {k: [] for k in c}
+        for j in range(cfg.moe_every):
+            is_moe = cfg.n_experts > 0 and j == cfg.moe_every - 1
+            sub_c = {k: v[j] for k, v in c.items()}
+            h = blk.rmsnorm(lp[f"sub{j}"]["ln1"], x)
+            a, sub_c = blk.attention(lp[f"sub{j}"]["attn"], h, cfg, policy,
+                                     positions=None, window=win[j],
+                                     cache=sub_c, cache_pos=pos_eff,
+                                     cache_write_len=write_len)
+            if cfg.post_norms:
+                a = blk.rmsnorm(lp[f"sub{j}"]["pn1"], a)
+            x = x + a
+            h = blk.rmsnorm(lp[f"sub{j}"]["ln2"], x)
+            f = _apply_ffn(lp[f"sub{j}"]["ffn"], h, cfg, policy, is_moe)
+            if cfg.post_norms:
+                f = blk.rmsnorm(lp[f"sub{j}"]["pn2"], f)
+            x = x + f
+            for k in outs:
+                outs[k].append(sub_c[k])
+        return x, {k: jnp.stack(v) for k, v in outs.items()}
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, windows))
+    return _mask_pad(_lm_head(params, x, cfg, policy), cfg), new_cache
+
+
 def decode_step(params, tokens, cache, pos, cfg: ModelConfig,
                 policy: QuantPolicy):
     """One token step.  tokens: (B, 1) int32; pos: scalar int32 step index.
@@ -122,40 +175,13 @@ def decode_step(params, tokens, cache, pos, cfg: ModelConfig,
     if cfg.family == "encdec":
         return _decode_encdec(params, tokens, cache, pos, cfg, policy)
 
-    x = params["emb"][tokens].astype(jnp.dtype(cfg.compute_dtype))
-    if cfg.name.startswith("gemma2"):
-        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
-
     if cfg.family == "decoder":
-        pos_eff = pos + cfg.frontend_tokens  # VLM prefix occupies slots 0..T-1
-        n_super = cfg.n_layers // cfg.moe_every
-        windows = _layer_windows(cfg, cfg.n_layers).reshape(n_super,
-                                                            cfg.moe_every)
+        logits, new_cache = _decoder_forward(params, tokens, cache, pos,
+                                             cfg, policy)
+        return logits[:, 0], new_cache
 
-        def body(x, inp):
-            lp, c, win = inp
-            outs = {k: [] for k in c}
-            for j in range(cfg.moe_every):
-                is_moe = cfg.n_experts > 0 and j == cfg.moe_every - 1
-                sub_c = {k: v[j] for k, v in c.items()}
-                h = blk.rmsnorm(lp[f"sub{j}"]["ln1"], x)
-                a, sub_c = blk.attention(lp[f"sub{j}"]["attn"], h, cfg, policy,
-                                         positions=None, window=win[j],
-                                         cache=sub_c, cache_pos=pos_eff)
-                if cfg.post_norms:
-                    a = blk.rmsnorm(lp[f"sub{j}"]["pn1"], a)
-                x = x + a
-                h = blk.rmsnorm(lp[f"sub{j}"]["ln2"], x)
-                f = _apply_ffn(lp[f"sub{j}"]["ffn"], h, cfg, policy, is_moe)
-                if cfg.post_norms:
-                    f = blk.rmsnorm(lp[f"sub{j}"]["pn2"], f)
-                x = x + f
-                for k in outs:
-                    outs[k].append(sub_c[k])
-            return x, {k: jnp.stack(v) for k, v in outs.items()}
-
-        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, windows))
-    elif cfg.family == "ssm":
+    x = params["emb"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "ssm":
         def body(x, inp):
             lp, c = inp
             y, c = ssd.ssd_decode_step(lp["ssd"], blk.rmsnorm(lp["ln"], x),
@@ -169,6 +195,48 @@ def decode_step(params, tokens, cache, pos, cfg: ModelConfig,
 
     logits = _mask_pad(_lm_head(params, x, cfg, policy), cfg)
     return logits[:, 0], new_cache
+
+
+def prefill_step(params, tokens, cache, pos, n_valid, cfg: ModelConfig,
+                 policy: QuantPolicy):
+    """One C-token prompt chunk in ONE dispatch (chunked prefill).
+
+    tokens : (B, C) int32 — per-slot prompt chunks, padded to a fixed C
+             (pad value is irrelevant: padded rows are neither written to
+             the cache nor attended by valid queries).
+    pos    : scalar or (B,) int32 — each slot's start position; the chunk
+             occupies cache columns ``pos..pos+n_valid-1``.
+    n_valid: (B,) int32 in [0, C] — valid tokens per slot.  0 masks the
+             slot out entirely: its cache is left bit-identical and its
+             logits row is garbage the caller must ignore (this is how the
+             serving engine keeps decode-phase slots out of a mixed-phase
+             prefill dispatch).
+
+    Returns (logits (B, vocab) at each slot's LAST valid token, new_cache).
+    Because C is static and ``pos``/``n_valid`` are dynamic, every chunk of
+    every prompt length reuses a single compilation — a P-token prompt
+    costs ceil(P/C) dispatches, not P.
+
+    Chunk-internal causality and the partial-tail contract ride the same
+    absolute-position mask math as decode (see ``blocks.attention``): a
+    valid query at position p attends exactly columns 0..p, never the
+    unwritten tail of its own chunk.  Decoder (attention-cache) family
+    only: SSM/hybrid recurrent state advances per token, so their prompt
+    phase stays token-by-token until per-slot state checkpointing lands
+    (ROADMAP open item).
+    """
+    if cfg.family != "decoder":
+        raise NotImplementedError(
+            "chunked prefill needs attention caches; SSM/hybrid recurrent "
+            "state advances per token (see ROADMAP: per-slot state "
+            "checkpointing)")
+    B, C = tokens.shape
+    nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (B,))
+    logits, new_cache = _decoder_forward(params, tokens, cache, pos, cfg,
+                                         policy, write_len=nv)
+    last = jnp.clip(nv - 1, 0, C - 1)
+    return jnp.take_along_axis(
+        logits, last[:, None, None], axis=1)[:, 0], new_cache
 
 
 def _mask_pad(logits, cfg):

@@ -21,6 +21,7 @@ init_params = transformer.init_params
 forward = transformer.forward
 init_cache = decoding.init_cache
 decode_step = decoding.decode_step
+prefill_step = decoding.prefill_step
 prefill = decoding.prefill
 pack_params = packed_store.pack_params          # generic pytree pass
 
@@ -64,7 +65,9 @@ def packed_model_specs(cfg: ModelConfig, policy: QuantPolicy, dtype=None):
 
 
 def decode_attn_backend(cfg: ModelConfig, policy: QuantPolicy) -> str:
-    """Which datapath single-token decode attention will take.
+    """Which datapath cached attention will take — decode steps AND prefill
+    chunks share one gate (the kernel's q-side grid tiles over S, so the
+    same predicate covers S=1 and S=C).
 
     * ``'pallas-packed'`` — the MXSF flash kernel consumes the packed cache
       codes directly (kernels/mxsf_attention.py; SAFE-MAC dataflow).

@@ -1,18 +1,46 @@
 """Continuous-batching serving engine (vLLM-style slot manager, CPU-scale).
 
-A fixed pool of batch slots shares one jitted ``decode_step`` compiled for
-static shapes; each slot carries its OWN position (decode_step accepts a
-(B,) position vector — per-sequence cache columns and rope phases). Finished
-requests free their slot; queued prompts prefill into it token-by-token
-while other slots keep decoding. Idle/stale slots are harmless: a slot's
-cache rows are only ever read by its own attention, and its next real step
-overwrites the column before reading it.
+A fixed pool of batch slots shares two jitted entry points compiled for
+static shapes — ``decode_step`` (one token per slot) and ``prefill_step``
+(one C-token prompt chunk per slot) — so each slot carries its OWN position
+((B,) position vectors: per-sequence cache columns and rope phases) and its
+own phase:
 
-Scope: attention-cache families (``decoder``). SSM/hybrid recurrent state
+  * **prefill phase** — the slot still has queued prompt tokens.  Chunked
+    prefill drains them C at a time: a P-token prompt costs ceil(P/C)
+    prefill dispatches instead of P single-token ticks, with every linear
+    running the fused MXSF quantize→matmul over C rows and all C cache
+    columns written in one dispatch (one packed-KV attention kernel call
+    per layer covers the whole chunk).
+  * **decode phase** — the prompt is consumed; the slot feeds back its last
+    sampled token one position per tick.
+
+Mixed-phase scheduling: each tick issues (up to) one decode dispatch for
+the decode-phase slots and one prefill dispatch for the prefill-phase
+slots.  Both dispatches carry the full static batch; slots in the *other*
+phase are masked — in the prefill dispatch by ``n_valid=0`` (cache writes
+dropped, logits ignored), in the decode dispatch by discarding the sampled
+token (the stale column a masked slot writes at its position is overwritten
+by its own prefill chunk in the same tick, before anything can attend to
+it).  Finished requests free their slot; idle/stale slots stay harmless: a
+slot's cache rows are only ever read by its own attention, and its next
+real step overwrites each column before reading it.
+
+``prefill_chunk=1`` falls back to the original token-by-token schedule
+(prompt tokens ride the decode dispatch — one dispatch per tick total).
+MoE configs always take that fallback: expert capacity is sized per
+dispatch, so a C-token chunk could drop tokens the one-token path routes,
+breaking exact parity with sequential decode.
+
+Generation stops at ``max_new`` tokens, a full cache, or the request's
+``eos_id`` (the EOS token is kept in ``Request.out``).
+
+Scope: attention-cache families (``decoder``).  SSM/hybrid recurrent state
 advances unconditionally per step, so continuous batching for those needs
-per-slot state checkpointing — documented as future work.
+per-slot state checkpointing — a ROADMAP open item.
 
-Tested against sequential generation in tests/test_serve_engine.py.
+Tested against sequential generation in tests/test_serve_engine.py and
+tests/test_chunked_prefill.py.
 """
 from __future__ import annotations
 
@@ -37,18 +65,21 @@ class Request:
     uid: int
     prompt: List[int]
     max_new: int
+    eos_id: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
 class ServeEngine:
-    """Fixed-slot continuous batching over decode_step."""
+    """Fixed-slot continuous batching over prefill_step + decode_step."""
 
     def __init__(self, cfg: ModelConfig, params, policy: QuantPolicy,
                  slots: int = 4, max_len: int = 256,
                  sampler: Optional[Callable] = None,
                  backend: Optional[str] = None,
-                 pack_weights: Optional[bool] = None):
+                 pack_weights: Optional[bool] = None,
+                 prefill_chunk: int = 16,
+                 eos_id: Optional[int] = None):
         if cfg.family != "decoder":
             raise NotImplementedError(
                 "continuous batching needs per-slot recurrent-state "
@@ -59,7 +90,8 @@ class ServeEngine:
             # validates eagerly so a bad combo fails at engine construction
             policy = policy.replace(backend=backend)
             _ = policy.use_pallas
-        # which decode attention datapath this engine's policy selects:
+        # which cached-attention datapath this engine's policy selects
+        # (decode steps and prefill chunks share the gate):
         # 'pallas-packed' = flash kernel over the packed MXSF cache codes,
         # 'jnp' = dequantize + mx_einsum (see models/model.py)
         self.attn_backend = M.decode_attn_backend(cfg, policy)
@@ -83,6 +115,7 @@ class ServeEngine:
         self.policy = policy
         self.slots = slots
         self.max_len = max_len
+        self.eos_id = eos_id
         self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
         # cache precision follows the model's compute dtype — init_cache's
         # bf16 default silently downcast K/V under float32 configs and made
@@ -92,23 +125,43 @@ class ServeEngine:
                                   ring=False, kv_fmt=policy.kv_cache_fmt)
         self.pos = np.zeros(slots, np.int32)
         self.live: List[Optional[Request]] = [None] * slots
-        # deques: admission pops the queue head and prefill pops one prompt
-        # token per tick — list.pop(0) made both O(n) under heavy admission
+        # deques: admission pops the queue head and prefill pops up to one
+        # chunk of prompt tokens per tick — list.pop(0) made both O(n)
         self.pending_prompt: List[Deque[int]] = [deque() for _ in range(slots)]
         self.queue: Deque[Request] = deque()
         self.last_tok = np.zeros(slots, np.int32)
         self._decode = jax.jit(
             lambda p, t, c, pos: M.decode_step(p, t, c, pos, cfg, policy))
+        # chunked prefill: C clamps to the cache width (a chunk is one
+        # contiguous dynamic_update-sized write) and collapses to 1 for MoE
+        # configs (see module docstring: per-dispatch expert capacity)
+        chunk = max(1, min(int(prefill_chunk), max_len))
+        if cfg.n_experts > 0:
+            chunk = 1
+        self.prefill_chunk = chunk
+        self._prefill = None
+        if chunk > 1:
+            self._prefill = jax.jit(
+                lambda p, t, c, pos, nv: M.prefill_step(p, t, c, pos, nv,
+                                                        cfg, policy))
+        # dispatch accounting (asserted in tests: a P-token prompt costs
+        # ceil(P/C) prefill dispatches, and neither entry point retraces
+        # across prompt lengths)
+        self.prefill_dispatches = 0
+        self.decode_dispatches = 0
         self._uid = 0
         self.ticks = 0
 
     def submit(self, prompt: List[int], max_new: int,
-               truncate: bool = False) -> Request:
+               truncate: bool = False,
+               eos_id: Optional[int] = None) -> Request:
         """Queue a prompt.  A prompt longer than the cache rejects (or, with
         ``truncate=True``, keeps the first ``max_len`` tokens): prefill
         writes one cache column per prompt token, so anything longer would
         run past the cache width and previously spun until ``max_ticks``
-        writing out-of-bounds columns."""
+        writing out-of-bounds columns.  ``eos_id`` (default: the engine's)
+        ends generation early when sampled; the EOS token stays in ``out``.
+        """
         prompt = list(prompt)
         if len(prompt) > self.max_len:
             if not truncate:
@@ -118,7 +171,8 @@ class ServeEngine:
                     "the engine for the workload")
             prompt = prompt[: self.max_len]
         self._uid += 1
-        req = Request(self._uid, prompt, max_new)
+        req = Request(self._uid, prompt, max_new,
+                      eos_id=self.eos_id if eos_id is None else eos_id)
         self.queue.append(req)
         return req
 
@@ -141,9 +195,76 @@ class ServeEngine:
                 self.pos[s] = 0
                 self.pending_prompt[s] = deque(req.prompt)
 
+    def _emit(self, s: int, tok: int, done: List[Request]):
+        """Record a generated token for slot ``s`` and retire the request
+        when it hits max_new, a full cache, or its EOS."""
+        req = self.live[s]
+        req.out.append(tok)
+        self.last_tok[s] = tok
+        if (len(req.out) >= req.max_new
+                or self.pos[s] >= self.max_len
+                or (req.eos_id is not None and tok == req.eos_id)):
+            req.done = True
+            done.append(req)
+            self.live[s] = None
+
     def _tick(self) -> List[Request]:
-        """One batched step: every slot consumes either its next prompt
-        token (prefill phase) or its last sampled token (decode phase)."""
+        if self.prefill_chunk == 1:
+            return self._tick_merged()
+        done: List[Request] = []
+        prefill_slots = [s for s in range(self.slots)
+                         if self.live[s] is not None
+                         and self.pending_prompt[s]]
+        decode_slots = [s for s in range(self.slots)
+                        if self.live[s] is not None
+                        and not self.pending_prompt[s]]
+
+        # decode dispatch first: a prefill-phase slot rides along masked
+        # (its sampled token is discarded) and writes one stale column at
+        # its position — which the prefill dispatch below then overwrites
+        # with the chunk's first real token before anything attends to it.
+        if decode_slots:
+            logits, self.cache = self._decode(
+                self.params,
+                jnp.asarray(self.last_tok)[:, None].astype(jnp.int32),
+                self.cache, jnp.asarray(self.pos))
+            self.decode_dispatches += 1
+            nxt = np.asarray(self.sampler(logits))
+            for s in decode_slots:
+                self.pos[s] = min(self.pos[s] + 1, self.max_len)
+                self._emit(s, int(nxt[s]), done)
+
+        # prefill dispatch: up to C prompt tokens per prefilling slot;
+        # decode/idle slots are masked by n_valid=0 (their cache writes are
+        # dropped inside blocks.attention, so the column the decode
+        # dispatch just wrote stays intact)
+        if prefill_slots:
+            C = self.prefill_chunk
+            toks = np.zeros((self.slots, C), np.int32)
+            nv = np.zeros(self.slots, np.int32)
+            for s in prefill_slots:
+                q = self.pending_prompt[s]
+                n = min(C, len(q))
+                for j in range(n):
+                    toks[s, j] = q.popleft()
+                nv[s] = n
+            logits, self.cache = self._prefill(
+                self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(self.pos), jnp.asarray(nv))
+            self.prefill_dispatches += 1
+            nxt = np.asarray(self.sampler(logits))
+            for s in prefill_slots:
+                self.pos[s] = min(self.pos[s] + int(nv[s]), self.max_len)
+                if not self.pending_prompt[s]:
+                    # prompt fully consumed; the chunk's last-valid-token
+                    # logits yield the first generated token
+                    self._emit(s, int(nxt[s]), done)
+        return done
+
+    def _tick_merged(self) -> List[Request]:
+        """Token-by-token fallback (prefill_chunk=1): every slot consumes
+        either its next prompt token (prefill phase) or its last sampled
+        token (decode phase) in ONE batched decode dispatch."""
         toks = np.array(self.last_tok)
         prefilling = np.zeros(self.slots, bool)
         for s in range(self.slots):
@@ -153,9 +274,15 @@ class ServeEngine:
         logits, self.cache = self._decode(
             self.params, jnp.asarray(toks)[:, None].astype(jnp.int32),
             self.cache, jnp.asarray(self.pos))
+        # a tick that consumed any prompt token is a prefill dispatch (the
+        # token-by-token path merges both phases into one dispatch)
+        if prefilling.any():
+            self.prefill_dispatches += 1
+        else:
+            self.decode_dispatches += 1
         nxt = np.asarray(self.sampler(logits))
 
-        done = []
+        done: List[Request] = []
         for s in range(self.slots):
             req = self.live[s]
             if req is None:
@@ -165,19 +292,7 @@ class ServeEngine:
             # done-guard below also required a non-empty ``out``, so a
             # prompt >= max_len spun until max_ticks writing OOB columns)
             self.pos[s] = min(self.pos[s] + 1, self.max_len)
-            if prefilling[s]:
-                self.last_tok[s] = (self.pending_prompt[s][0]
-                                    if self.pending_prompt[s] else int(nxt[s]))
-                if not self.pending_prompt[s]:
-                    # prompt fully consumed; nxt is the first generated token
-                    req.out.append(int(nxt[s]))
-                    self.last_tok[s] = int(nxt[s])
-            else:
-                req.out.append(int(nxt[s]))
-                self.last_tok[s] = int(nxt[s])
-            if (len(req.out) >= req.max_new
-                    or self.pos[s] >= self.max_len):
-                req.done = True
-                done.append(req)
-                self.live[s] = None
+            if prefilling[s] and self.pending_prompt[s]:
+                continue  # still mid-prompt: nothing sampled for this slot
+            self._emit(s, int(nxt[s]), done)
         return done

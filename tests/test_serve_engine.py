@@ -80,6 +80,46 @@ def test_engine_long_prompt_rejected_and_capped():
     assert int(eng.pos.max()) <= max_len
 
 
+def test_engine_stops_at_eos():
+    """Generation ends at the request's EOS token instead of always running
+    to max_new; the EOS stays in ``out``.  Regression: the engine used to
+    have no stop-token support at all."""
+    cfg = get_config("qwen2.5-32b").reduced().replace(compute_dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompt = list(rng.integers(0, cfg.vocab, size=5))
+    max_new = 6
+
+    # learn what the model emits, then replay with that token as EOS
+    eng = ServeEngine(cfg, params, BF16, slots=2, max_len=32)
+    free = eng.submit(prompt, max_new)
+    eng.run()
+    assert len(free.out) == max_new
+    eos = free.out[2]
+    assert eos not in free.out[:2]  # a clean cut point for the assertions
+
+    for chunk in (1, 4):  # both schedules honor EOS
+        eng = ServeEngine(cfg, params, BF16, slots=2, max_len=32,
+                          prefill_chunk=chunk, eos_id=eos)
+        req = eng.submit(prompt, max_new)
+        eng.run()
+        assert req.done and req.out == free.out[:3], (chunk, req.out)
+
+    # per-request eos_id overrides the engine default
+    eng = ServeEngine(cfg, params, BF16, slots=2, max_len=32, eos_id=eos)
+    req = eng.submit(prompt, max_new, eos_id=free.out[0])
+    eng.run()
+    assert req.out == free.out[:1]
+    # and eos on the FIRST generated token (emitted by the prefill
+    # dispatch) retires the request straight out of the prefill phase
+    eng = ServeEngine(cfg, params, BF16, slots=2, max_len=32,
+                      prefill_chunk=4, eos_id=free.out[0])
+    req = eng.submit(prompt, max_new)
+    eng.run()
+    assert req.done and req.out == free.out[:1]
+    assert eng.decode_dispatches == 0
+
+
 def test_engine_pallas_packed_kv_matches_sequential():
     """ServeEngine(backend='pallas', kv_cache_fmt='mxsf') decodes through
     the packed-KV flash kernel: one kernel compile across the whole run,
@@ -102,8 +142,10 @@ def test_engine_pallas_packed_kv_matches_sequential():
     reqs = [eng.submit(p, max_new) for p in prompts]
     fin = eng.run()
     assert len(fin) == len(prompts) and all(r.done for r in reqs)
-    # growing cache, one jitted decode_step -> exactly one kernel compile
-    assert MA.trace_count() == traces0 + 1
+    # growing cache, two jitted entry points (S=1 decode + S=C chunked
+    # prefill) -> exactly one kernel compile per grid, regardless of how
+    # many prompts/tokens were served
+    assert MA.trace_count() == traces0 + 2
 
     def sequential(policy, prompt):
         cache = M.init_cache(cfg, 1, max_len, ring=False, kv_fmt="mxsf")
