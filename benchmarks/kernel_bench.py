@@ -268,6 +268,17 @@ def run():
          f"({hbm_tok / hbm_chk:.1f}x_less_weight_traffic_per_prompt_token)",
          dispatches=d_chk, hbm_bytes=hbm_chk)
 
+    # prefill_chunk="auto" resolution (serve/engine.auto_prefill_chunk):
+    # what the engine picks when no explicit C is given — shape heuristic
+    # (fill one fused-matmul M tile across the slot batch, drain a full
+    # prompt in >= 4 chunks) floored by the chunked-prefill C measured
+    # above, so the bench rows feed the tuner they were built for
+    from repro.serve.engine import auto_prefill_chunk
+    for ml, sl in ((256, 4), (4096, 16)):
+        ac = auto_prefill_chunk(ml, sl)
+        emit(f"kernel_prefill_auto_chunk_maxlen{ml}_slots{sl}", 0.0,
+             f"C={ac}", chunk=ac)
+
     # structural roofline of the dequant-matmul (TPU v5e targets).
     # With a TM x TN output tile resident in VMEM and K streamed, HBM bytes
     # per tile ~ (TM + TN) * K of 1-byte codes (+ scales/32), so

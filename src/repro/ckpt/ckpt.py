@@ -132,12 +132,27 @@ def latest_step(ckpt_dir) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _place_sharded(arr: np.ndarray, sharding):
+    """Per-shard device placement: each device materializes only ITS slice
+    of the host array (``make_array_from_callback`` hands us the per-device
+    index), so restoring a tensor sharded N ways moves 1/N of its bytes per
+    device instead of a full copy that is then sliced on device.  For a
+    packed store this means a sharded restore never even *transfers*
+    anything but each shard's own uint8 codes/scales."""
+    return jax.make_array_from_callback(arr.shape, sharding,
+                                        lambda idx: arr[idx])
+
+
 def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
             shardings: Any = None):
     """Restore into the structure of ``target`` (a pytree of arrays or
     ShapeDtypeStructs).  ``shardings``: optional matching pytree of
     ``NamedSharding`` — arrays are placed onto that (possibly different)
-    mesh, which is what elastic re-scaling uses."""
+    mesh via per-shard transfers, which is what elastic re-scaling and
+    sharded serving restores use.  Packed targets restore codes/scales in
+    their stored uint8 — full-precision weights are never materialized,
+    on host or device (``models/model.packed_model_specs`` builds the
+    target without instantiating them either)."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -155,7 +170,7 @@ def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
         want = jax.numpy.dtype(leaf.dtype)
         arr = arr.astype(want) if arr.dtype != want else arr
         if shard is not None:
-            leaves.append(jax.device_put(arr, shard))
+            leaves.append(_place_sharded(arr, shard))
         else:
             leaves.append(jax.numpy.asarray(arr))
     return tdef.unflatten(leaves), step

@@ -33,7 +33,8 @@ from . import formats as F
 from .policy import QuantPolicy
 
 __all__ = ["PACKED_LEAF_NAMES", "packable_policy", "weight_block",
-           "pack_params", "unpack_params", "pack_leaf", "store_nbytes"]
+           "pack_params", "unpack_params", "pack_leaf", "store_nbytes",
+           "packed_spec", "shard_block_aligned"]
 
 # dict keys of matmul-weight leaves (see models/blocks.py, models/ssd.py);
 # every one of them is consumed through blocks.dense -> mx_dot
@@ -116,6 +117,69 @@ def unpack_params(params):
         lambda leaf: B.dequantize(leaf)
         if isinstance(leaf, B.QuantizedTensor) else leaf,
         params, is_leaf=lambda leaf: isinstance(leaf, B.QuantizedTensor))
+
+
+# ---------------------------------------------------------------------------
+# sharding: packed-layout partition specs
+# ---------------------------------------------------------------------------
+#
+# A QuantizedTensor must shard its uint8 codes and its E8M0 scale grid
+# CONSISTENTLY: every device needs the scale bytes for exactly the blocks
+# whose codes it holds.  A mesh axis of size A may therefore split dim i
+# only when the *scale-grid* extent of that dim divides A — then each shard
+# holds whole blocks (codes dim = grid * block_i divides too, and for the
+# leading stacked-layer dims grid == codes extent).  Anything else falls
+# back to replication, the same divisibility-→-replicate contract
+# ``launch/mesh.py::MeshRules`` applies to f32 parameters.
+
+
+def _axis_size(assignment, mesh_axis_sizes) -> int:
+    axes = assignment if isinstance(assignment, tuple) else (assignment,)
+    size = 1
+    for a in axes:
+        size *= mesh_axis_sizes[a]
+    return size
+
+
+def packed_spec(qt: B.QuantizedTensor, base_spec, mesh_axis_sizes):
+    """Partition spec for a packed leaf, derived from the f32 rule.
+
+    ``base_spec`` is the PartitionSpec the f32 weight of logical shape
+    ``qt.shape`` would get (codes have the same rank); ``mesh_axis_sizes``
+    maps axis name -> size (``dict(mesh.shape)``).  Returns ONE spec valid
+    for both ``codes`` and ``scale_e8m0``: a dim keeps its mesh axes only
+    when the scale grid divides them, else it is replicated.  Block-padded
+    dims are judged on the PADDED extents (``qt.scale_e8m0.shape``), not
+    the logical ones — a (64, N) weight under 48-row blocks has a 2-row
+    scale grid and cannot split 4 ways even though 64 % 4 == 0.
+    """
+    nd = qt.scale_e8m0.ndim
+    spec = list(base_spec) + [None] * (nd - len(base_spec))
+    out = []
+    for dim in range(nd):
+        assignment = spec[dim]
+        if assignment is None:
+            out.append(None)
+            continue
+        grid = qt.scale_e8m0.shape[dim]
+        size = _axis_size(assignment, mesh_axis_sizes)
+        out.append(assignment if size > 0 and grid % size == 0 else None)
+    return jax.sharding.PartitionSpec(*out)
+
+
+def shard_block_aligned(qt: B.QuantizedTensor, spec, mesh_axis_sizes) -> bool:
+    """Whether ``spec`` keeps whole MX blocks per shard — the kernel-gate
+    check for externally supplied shardings (specs built by
+    ``packed_spec`` satisfy it by construction): per-shard codes must stay
+    a whole number of blocks or the fused/dequant matmul kernels cannot
+    consume the shard."""
+    for dim, assignment in enumerate(tuple(spec)[: qt.scale_e8m0.ndim]):
+        if assignment is None:
+            continue
+        if qt.scale_e8m0.shape[dim] % _axis_size(assignment,
+                                                 mesh_axis_sizes) != 0:
+            return False
+    return True
 
 
 def store_nbytes(params) -> dict:

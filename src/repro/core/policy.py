@@ -27,6 +27,10 @@ class QuantPolicy:
     save_packed: bool = True     # store uint8-packed residuals for bwd
     kv_cache_fmt: str = ""       # e.g. 'mxsf': 8-bit packed KV cache (serving)
     backend: str = "jnp"         # 'jnp' | 'pallas': mx_dot matmul datapath
+    pallas_attention: bool = True  # allow the packed-KV attention kernel;
+    # the serving engine flips this off per-config when the mesh layout
+    # breaks the kernel's per-shard gate (e.g. a sequence-parallel cache)
+    # while keeping the pallas matmul datapath
 
     @property
     def enabled(self) -> bool:
@@ -60,8 +64,8 @@ class QuantPolicy:
         even under ``block_mode='2d'`` training layouts — same contract as
         ``mx_einsum``/``qdq_along``.
         """
-        return (self.use_pallas and self.kv_cache_fmt == "mxsf"
-                and not self.quantize_bwd)
+        return (self.pallas_attention and self.use_pallas
+                and self.kv_cache_fmt == "mxsf" and not self.quantize_bwd)
 
     def fwd_block(self, for_matrix: bool = True):
         if self.block_mode == "2d":

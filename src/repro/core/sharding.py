@@ -82,3 +82,22 @@ def constrain(x: jax.Array, *roles: Optional[str]) -> jax.Array:
     if spec is None:
         return x
     return jax.lax.with_sharding_constraint(x, spec)
+
+
+def per_device_nbytes(tree) -> dict:
+    """Actual bytes resident per device for a pytree of live arrays.
+
+    Sums ``addressable_shards`` sizes, so a sharded leaf counts each shard
+    on its own device while a replicated leaf counts full-size everywhere —
+    the number deployments eyeball to confirm a store/cache really split
+    (``ServeEngine.stats()`` reports it).  Non-array leaves are skipped.
+    """
+    out: dict = {}
+    for leaf in jax.tree.leaves(tree):
+        shards = getattr(leaf, "addressable_shards", None)
+        if shards is None:
+            continue
+        for sh in shards:
+            key = str(sh.device)
+            out[key] = out.get(key, 0) + sh.data.nbytes
+    return out

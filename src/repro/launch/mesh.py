@@ -13,7 +13,9 @@ Parallelism mapping (DESIGN.md §4):
   * SP   : long-context KV/state sequence dim over "data" (batch=1 cells)
 
 All rules guard divisibility — a dim that does not divide its mesh axes is
-replicated rather than unevenly sharded.
+replicated rather than unevenly sharded.  Packed (pack-once store) leaves
+get layout-aware rules: codes and shared-exponent scales shard together,
+judged on the scale grid (``packed_leaf_spec``; docs/ARCHITECTURE.md §10).
 """
 from __future__ import annotations
 
@@ -21,6 +23,9 @@ from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import packed_store
+from ..core.blocking import QuantizedTensor
 
 __all__ = ["make_production_mesh", "make_test_mesh", "MeshRules",
            "state_shardings", "batch_shardings", "cache_shardings"]
@@ -43,9 +48,14 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_test_mesh(data: int = 2, model: int = 2) -> Mesh:
-    """Small mesh from whatever devices exist (tests/examples)."""
+    """Small mesh from whatever devices exist (tests/examples).
+
+    BOTH axes clamp to the device count — the old version clamped only
+    ``data``, so a 1-device box with the default ``model=2`` raised from
+    ``jax.make_mesh`` — and the floor is a (1, 1) mesh."""
     n = len(jax.devices())
-    data = min(data, max(1, n // model))
+    model = max(1, min(model, n))
+    data = max(1, min(data, n // model))
     return jax.make_mesh((data, model), ("data", "model"))
 
 
@@ -101,8 +111,27 @@ class MeshRules:
         # stacked-layer leading dims are handled by caller stripping them
         return P(*([None] * dims))
 
+    def packed_leaf_spec(self, name: str, qt: QuantizedTensor) -> P:
+        """Spec for a pack-once store leaf (``core/packed_store.py``).
+
+        Derived from the f32 rule on the LOGICAL weight shape, then
+        filtered through the packed-layout consistency check: codes and
+        shared-exponent scales shard together, so a dim splits only when
+        its scale grid divides the mesh axes (uneven grids replicate —
+        same contract as the f32 divisibility guards)."""
+        base_rank = _base_rank(name)
+        lead = len(qt.shape) - base_rank
+        spec = self.param_spec(name, qt.shape[lead:])
+        base = P(*([None] * lead + list(spec)))
+        return packed_store.packed_spec(qt, base, dict(self.mesh.shape))
+
     def param_sharding_tree(self, params_shapes):
-        """ShapeDtypeStruct tree -> NamedSharding tree (layer-stack aware)."""
+        """Param tree -> NamedSharding tree (layer-stack aware).
+
+        Accepts ShapeDtypeStruct trees, live array trees, and PACKED trees:
+        a ``QuantizedTensor`` leaf maps to a QuantizedTensor carrying one
+        NamedSharding for its codes and one for its scales (the same
+        pytree structure jit/device_put expect for the packed store)."""
 
         def rule(path, leaf):
             name = None
@@ -111,6 +140,10 @@ class MeshRules:
                 if not k.isdigit():
                     name = k
                     break
+            if isinstance(leaf, QuantizedTensor):
+                ns = self.named(self.packed_leaf_spec(name, leaf))
+                return QuantizedTensor(ns, ns, leaf.fmt, leaf.block,
+                                       leaf.shape, leaf.dtype)
             shape = leaf.shape
             # strip stacked-layer leading dims: rules match trailing dims
             base_rank = _base_rank(name)
@@ -119,7 +152,9 @@ class MeshRules:
             full = P(*([None] * lead + list(spec)))
             return self.named(full)
 
-        return jax.tree_util.tree_map_with_path(rule, params_shapes)
+        return jax.tree_util.tree_map_with_path(
+            rule, params_shapes,
+            is_leaf=lambda x: isinstance(x, QuantizedTensor))
 
     # -- activation/batch rules -----------------------------------------
     def data_spec(self, shape: Tuple[int, ...], batch_axis: int = 0) -> P:

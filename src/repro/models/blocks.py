@@ -304,6 +304,10 @@ def _attend_packed(q, cache, pos_vec, window, p, cfg: ModelConfig,
     # makes a relaid HBM copy (see decoding.kv_cache_rows for the mapping)
     kc, ks = cache["k_codes"], cache["k_scales"]
     vc, vs = cache["v_codes"], cache["v_scales"]
+    # under a mesh, pin q to the cache's layout (batch over DP, heads over
+    # TP) so the kernel's (batch x head) rows sit with their kv rows and
+    # GSPMD partitions the grid instead of gathering the cache
+    q = shd.constrain(q, "batch", None, "heads", None)
     qr = q.transpose(0, 2, 1, 3).reshape(B * h, S, dh)
     if policy.attn_matmuls:
         qr = qdq_along(qr, policy.fwd_fmt, policy, -1)
@@ -315,6 +319,8 @@ def _attend_packed(q, cache, pos_vec, window, p, cfg: ModelConfig,
     y = kops.mxsf_attention(qr, kc, ks, vc, vs, causal=True, kv_len=kvl,
                             q_offset=off, window=win)
     ctx = y.reshape(B, h, S, dh).transpose(0, 2, 1, 3).reshape(B, S, h * dh)
+    # 'hidden' puts the flattened head dim on TP, matching wo's row shard
+    ctx = shd.constrain(ctx, "batch", None, "hidden")
     return dense(ctx, p["wo"], policy)
 
 

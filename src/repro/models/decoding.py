@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..core import sharding as shd
 from ..core.policy import QuantPolicy
 from . import blocks as blk
 from . import ssd
@@ -134,6 +135,9 @@ def _decoder_forward(params, tokens, cache, pos, cfg: ModelConfig,
     x = params["emb"][tokens].astype(jnp.dtype(cfg.compute_dtype))
     if cfg.name.startswith("gemma2"):
         x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    # slot batch over the DP axes from the first layer on (no-op without a
+    # mesh context; the sharded serving engine installs one)
+    x = shd.constrain(x, "batch", None, None)
     pos_eff = pos + cfg.frontend_tokens  # VLM prefix occupies slots 0..T-1
     n_super = cfg.n_layers // cfg.moe_every
     windows = _layer_windows(cfg, cfg.n_layers).reshape(n_super,
@@ -334,6 +338,7 @@ def prefill(params, batch, cache, cfg: ModelConfig, policy: QuantPolicy):
             x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
         if "embeds" in batch and cfg.frontend_tokens:
             x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
+        x = shd.constrain(x, "batch", None, None)
         B, S, _ = x.shape
         n_super = cfg.n_layers // cfg.moe_every
         windows = _layer_windows(cfg, cfg.n_layers).reshape(n_super,

@@ -64,7 +64,8 @@ def packed_model_specs(cfg: ModelConfig, policy: QuantPolicy, dtype=None):
         cfg, init_params(jax.random.PRNGKey(0), cfg), policy, dtype))
 
 
-def decode_attn_backend(cfg: ModelConfig, policy: QuantPolicy) -> str:
+def decode_attn_backend(cfg: ModelConfig, policy: QuantPolicy,
+                        cache_shardings=None) -> str:
     """Which datapath cached attention will take — decode steps AND prefill
     chunks share one gate (the kernel's q-side grid tiles over S, so the
     same predicate covers S=1 and S=C).
@@ -75,14 +76,45 @@ def decode_attn_backend(cfg: ModelConfig, policy: QuantPolicy) -> str:
       (also the fallback for softcapped attention and SWA patterns, whose
       window masks need the jnp path's ring-aware slot->position math).
 
+    ``cache_shardings`` (a NamedSharding tree for the cache pytree, from
+    ``launch/mesh.cache_shardings``) adds the per-shard half of the gate:
+    when the cache POSITION axis is sharded (sequence parallelism — the
+    batch/kv dims could not absorb the mesh), each shard holds a slice of
+    every sequence, and the flash kernel's per-row online softmax cannot
+    run shard-local (it would need a cross-device m/l/acc combine).  Those
+    layouts take the jnp path, whose einsums GSPMD partitions with the
+    collectives in the right places.  Batch- and kv-head-sharded caches
+    keep the kernel: per-shard rows are whole (batch x kv-head) sequences.
+
     Shares ``blocks.attn_kernel_eligible`` with the gate in
     ``blocks.attention`` (no drift); the serving engine records it so
     deployments can assert the fast path actually engaged.
     """
     from . import blocks
-    if blocks.attn_kernel_eligible(cfg, policy):
-        return "pallas-packed"
-    return "jnp"
+    if not blocks.attn_kernel_eligible(cfg, policy):
+        return "jnp"
+    if cache_shardings is not None and \
+            cache_position_axis_sharded(cache_shardings):
+        return "jnp"
+    return "pallas-packed"
+
+
+def cache_position_axis_sharded(cache_shardings) -> bool:
+    """True when any KV-cache leaf shards its position/window axis (the
+    ``W`` of ``(..., B, W, kv, dh)``) — the one cache layout the packed
+    flash-attention kernel cannot consume shard-local (see
+    ``decode_attn_backend``)."""
+    flat = jax.tree_util.tree_flatten_with_path(cache_shardings)[0]
+    for path, ns in flat:
+        name = str(getattr(path[-1], "key", path[-1])) if path else ""
+        if name not in ("k", "v", "k_codes", "v_codes",
+                        "k_scales", "v_scales"):
+            continue
+        spec = tuple(ns.spec)
+        w_ax = len(spec) - 3
+        if w_ax >= 0 and spec[w_ax] is not None:
+            return True
+    return False
 
 
 def param_count(params) -> int:

@@ -35,6 +35,21 @@ breaking exact parity with sequential decode.
 Generation stops at ``max_new`` tokens, a full cache, or the request's
 ``eos_id`` (the EOS token is kept in ``Request.out``).
 
+**Sharded serving** (``mesh=...``): the engine places the pack-once store
+(packed-layout ``MeshRules``: codes + shared-exponent scales split
+together, uneven dims replicate), shards the packed KV cache slot-batch
+over the DP axes and kv-heads over the TP axis, and jits both entry
+points with explicit in/out shardings under ``sharding.mesh_context`` so
+the role constraints in ``models/blocks.py`` resolve to mesh axes.  GSPMD
+partitioning is semantics-preserving, so a sharded engine is
+token-for-token identical to the single-device one (asserted across mesh
+shapes in tests/test_sharded_serving.py).  Kernel gates are re-checked
+per shard: a layout the flash-attention kernel cannot consume shard-local
+falls back to the jnp path for this engine only, recorded in
+``shard_fallback``.  ``stats()`` reports dispatch counts, occupancy and
+per-device store/cache bytes; ``from_checkpoint`` restores a packed
+checkpoint per-shard without ever materializing full-precision weights.
+
 Scope: attention-cache families (``decoder``).  SSM/hybrid recurrent state
 advances unconditionally per step, so continuous batching for those needs
 per-slot state checkpointing — a ROADMAP open item.
@@ -44,9 +59,13 @@ tests/test_chunked_prefill.py.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import json
+import os
+import re
 from collections import deque
-from typing import Callable, Deque, List, Optional
+from typing import Callable, Deque, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -54,10 +73,54 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core import packed_store
+from ..core import sharding as shd
+from ..core.blocking import QuantizedTensor
 from ..core.policy import QuantPolicy
+from ..launch import mesh as mesh_lib
 from ..models import model as M
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "auto_prefill_chunk"]
+
+
+def _bench_chunk(path: Optional[str]) -> int:
+    """Chunk size the kernel bench measured to beat token-by-token prefill
+    on this install (BENCH_kernel.json's ``kernel_prefill_chunked_*`` rows,
+    written by benchmarks/kernel_bench.py); 1 when no bench file exists."""
+    path = path or os.environ.get("BENCH_KERNEL_JSON", "BENCH_kernel.json")
+    try:
+        with open(path) as f:
+            rows = json.load(f).get("rows", [])
+    except (OSError, ValueError):
+        return 1
+    for row in rows:
+        if row.get("name") == "kernel_prefill_chunked_dispatches":
+            m = re.search(r"C=(\d+)", row.get("derived", ""))
+            if m:
+                return max(1, int(m.group(1)))
+    return 1
+
+
+def auto_prefill_chunk(max_len: int, slots: int,
+                       bench_path: Optional[str] = None) -> int:
+    """Resolve ``prefill_chunk="auto"``: pick C from the engine shape and,
+    when present, the measured kernel-bench prefill rows.
+
+    C trades dispatch count (a P-token prompt costs ceil(P/C) prefill
+    dispatches) against per-chunk latency and VMEM: a prefill dispatch
+    runs ``slots * C`` rows through every linear, so the chunk that fills
+    one fused-matmul M tile (256 rows, the kernels/ops.py default)
+    across the slot batch saturates the kernel without growing the
+    working set — and a full-length prompt should still drain in >= 4
+    chunks so mixed-phase ticks keep interleaving decode work.  The
+    BENCH_kernel.json prefill rows record a C measured to beat
+    token-by-token on this install; that floors the heuristic.  Integer
+    ``prefill_chunk`` values bypass all of this and keep exact manual
+    behavior.
+    """
+    c = max(1, min(max_len // 4, 256 // max(slots, 1)))
+    c = 1 << (c.bit_length() - 1)  # round down to a tile-friendly pow2
+    c = max(c, _bench_chunk(bench_path))
+    return max(1, min(c, max_len))
 
 
 @dataclasses.dataclass
@@ -78,8 +141,9 @@ class ServeEngine:
                  sampler: Optional[Callable] = None,
                  backend: Optional[str] = None,
                  pack_weights: Optional[bool] = None,
-                 prefill_chunk: int = 16,
-                 eos_id: Optional[int] = None):
+                 prefill_chunk: Union[int, str] = 16,
+                 eos_id: Optional[int] = None,
+                 mesh=None):
         if cfg.family != "decoder":
             raise NotImplementedError(
                 "continuous batching needs per-slot recurrent-state "
@@ -90,12 +154,40 @@ class ServeEngine:
             # validates eagerly so a bad combo fails at engine construction
             policy = policy.replace(backend=backend)
             _ = policy.use_pallas
-        # which cached-attention datapath this engine's policy selects
-        # (decode steps and prefill chunks share the gate):
-        # 'pallas-packed' = flash kernel over the packed MXSF cache codes,
-        # 'jnp' = dequantize + mx_einsum (see models/model.py)
-        self.attn_backend = M.decode_attn_backend(cfg, policy)
         self.cfg = cfg
+        # -- mesh placement (sharded serving) -----------------------------
+        # mesh=None keeps the single-host engine bit-identical.  With a
+        # mesh, the layout contract is: slot batch over the DP ("data")
+        # axes, kv heads over the TP ("model") axis for the packed KV
+        # cache, and the pack-once store sharded by the packed-layout
+        # MeshRules (codes and shared-exponent scales split together;
+        # uneven dims replicate) — docs/ARCHITECTURE.md §10.
+        self.mesh = mesh
+        self.rules = mesh_lib.MeshRules(mesh) if mesh is not None else None
+        # cache precision follows the model's compute dtype — init_cache's
+        # bf16 default silently downcast K/V under float32 configs and made
+        # batched decode diverge from the sequential reference
+        self.cache = M.init_cache(cfg, slots, max_len,
+                                  dtype=jnp.dtype(cfg.compute_dtype),
+                                  ring=False, kv_fmt=policy.kv_cache_fmt)
+        self._cache_sh = None
+        if self.rules is not None:
+            self._cache_sh = mesh_lib.cache_shardings(self.rules, self.cache,
+                                                      slots)
+        # per-shard half of the attention-kernel gate: a cache layout the
+        # flash kernel cannot consume shard-local (position axis sharded =
+        # sequence parallelism) downgrades THIS engine to the jnp path —
+        # recorded in shard_fallback like attn_backend records the static
+        # gate, so deployments can see why the fast path disengaged
+        self.shard_fallback: Optional[str] = None
+        if (self.rules is not None
+                and M.decode_attn_backend(cfg, policy) == "pallas-packed"
+                and M.cache_position_axis_sharded(self._cache_sh)):
+            policy = policy.replace(pallas_attention=False)
+            self.shard_fallback = (
+                "cache position axis sharded (sequence-parallel fallback "
+                "layout): packed-attention kernel cannot run shard-local, "
+                "using the jnp cached-attention path")
         # pack-once weight store (default for quantizing policies): the
         # whole weight pytree is cast to resident MXSF codes HERE, so decode
         # steps perform zero weight-quantize dispatches and the caller can
@@ -110,19 +202,37 @@ class ServeEngine:
         self.packed = can_pack and (pack_weights is None or pack_weights)
         if self.packed:
             params = M.pack_model_params(cfg, params, policy)
+        self._store_sh = None
+        if self.rules is not None:
+            self._store_sh = self.rules.param_sharding_tree(params)
+            # per-shard half of the matmul-kernel gate: every sharded
+            # packed leaf must keep whole MX blocks per shard.  Specs
+            # derived by MeshRules satisfy this by construction (uneven
+            # scale grids replicate), so this is a defensive check — but
+            # if it ever fails, the engine falls back to the jnp matmul
+            # path per-config rather than feeding the kernels torn blocks.
+            if policy.use_pallas and not self._store_blocks_aligned(params):
+                policy = policy.replace(backend="jnp")
+                self.shard_fallback = (
+                    (self.shard_fallback + "; ") if self.shard_fallback
+                    else "") + (
+                    "packed store sharding tears MX blocks per shard: "
+                    "falling back to the jnp matmul path")
+            params = jax.device_put(params, self._store_sh)
+            self.cache = jax.device_put(self.cache, self._cache_sh)
         self.params = params
         self.store_nbytes = packed_store.store_nbytes(params)
+        # which cached-attention datapath this engine's policy selects
+        # (decode steps and prefill chunks share the gate):
+        # 'pallas-packed' = flash kernel over the packed MXSF cache codes,
+        # 'jnp' = dequantize + mx_einsum (see models/model.py)
+        self.attn_backend = M.decode_attn_backend(cfg, policy,
+                                                  self._cache_sh)
         self.policy = policy
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.sampler = sampler or (lambda logits: jnp.argmax(logits, -1))
-        # cache precision follows the model's compute dtype — init_cache's
-        # bf16 default silently downcast K/V under float32 configs and made
-        # batched decode diverge from the sequential reference
-        self.cache = M.init_cache(cfg, slots, max_len,
-                                  dtype=jnp.dtype(cfg.compute_dtype),
-                                  ring=False, kv_fmt=policy.kv_cache_fmt)
         self.pos = np.zeros(slots, np.int32)
         self.live: List[Optional[Request]] = [None] * slots
         # deques: admission pops the queue head and prefill pops up to one
@@ -130,27 +240,137 @@ class ServeEngine:
         self.pending_prompt: List[Deque[int]] = [deque() for _ in range(slots)]
         self.queue: Deque[Request] = deque()
         self.last_tok = np.zeros(slots, np.int32)
-        self._decode = jax.jit(
-            lambda p, t, c, pos: M.decode_step(p, t, c, pos, cfg, policy))
         # chunked prefill: C clamps to the cache width (a chunk is one
         # contiguous dynamic_update-sized write) and collapses to 1 for MoE
-        # configs (see module docstring: per-dispatch expert capacity)
-        chunk = max(1, min(int(prefill_chunk), max_len))
+        # configs (see module docstring: per-dispatch expert capacity);
+        # "auto" sizes C from the engine shape + measured bench rows
+        if prefill_chunk == "auto":
+            chunk = auto_prefill_chunk(max_len, slots)
+        elif isinstance(prefill_chunk, str):
+            raise ValueError(f"prefill_chunk={prefill_chunk!r}: expected an "
+                             "int or 'auto'")
+        else:
+            chunk = max(1, min(int(prefill_chunk), max_len))
         if cfg.n_experts > 0:
             chunk = 1
         self.prefill_chunk = chunk
-        self._prefill = None
-        if chunk > 1:
-            self._prefill = jax.jit(
-                lambda p, t, c, pos, nv: M.prefill_step(p, t, c, pos, nv,
-                                                        cfg, policy))
+        # jitted entry points; under a mesh both carry explicit in/out
+        # shardings (store + cache stay put, token/position/logit batches
+        # split over DP) and are traced inside sharding.mesh_context so the
+        # role constraints in models/blocks.py resolve to mesh axes
+        step = lambda p, t, c, pos: M.decode_step(p, t, c, pos, cfg, policy)
+        pre = lambda p, t, c, pos, nv: M.prefill_step(p, t, c, pos, nv,
+                                                      cfg, policy)
+        if self.rules is None:
+            self._decode = jax.jit(step)
+            self._prefill = jax.jit(pre) if chunk > 1 else None
+        else:
+            r = self.rules
+            tok = r.named(r.data_spec((slots, 1)))
+            vec = r.named(r.data_spec((slots,)))
+            logit = r.named(r.data_spec((slots, max(cfg.padded_vocab, 1))))
+            self._decode = jax.jit(
+                step,
+                in_shardings=(self._store_sh, tok, self._cache_sh, vec),
+                out_shardings=(logit, self._cache_sh))
+            self._prefill = None
+            if chunk > 1:
+                ptok = r.named(r.data_spec((slots, chunk)))
+                self._prefill = jax.jit(
+                    pre,
+                    in_shardings=(self._store_sh, ptok, self._cache_sh,
+                                  vec, vec),
+                    out_shardings=(logit, self._cache_sh))
         # dispatch accounting (asserted in tests: a P-token prompt costs
         # ceil(P/C) prefill dispatches, and neither entry point retraces
         # across prompt lengths)
         self.prefill_dispatches = 0
         self.decode_dispatches = 0
+        self.tokens_generated = 0
+        self._live_slot_ticks = 0
         self._uid = 0
         self.ticks = 0
+
+    def _store_blocks_aligned(self, params) -> bool:
+        """Kernel-gate check: every sharded packed leaf keeps whole MX
+        blocks per shard (see core/packed_store.shard_block_aligned)."""
+        axis_sizes = dict(self.mesh.shape)
+        is_qt = lambda x: isinstance(x, QuantizedTensor)
+        leaves = jax.tree_util.tree_leaves(params, is_leaf=is_qt)
+        shs = jax.tree_util.tree_leaves(self._store_sh, is_leaf=is_qt)
+        for leaf, sh in zip(leaves, shs):
+            if isinstance(leaf, QuantizedTensor) and \
+                    not packed_store.shard_block_aligned(
+                        leaf, sh.codes.spec, axis_sizes):
+                return False
+        return True
+
+    def _hints(self):
+        """Role-constraint context for dispatches: under a mesh, activates
+        the ``sharding.constrain`` hints in models/blocks.py (trace-time),
+        else a no-op."""
+        if self.rules is None:
+            return contextlib.nullcontext()
+        return shd.mesh_context(self.mesh, self.rules.dp, self.rules.tp)
+
+    @classmethod
+    def from_checkpoint(cls, cfg: ModelConfig, ckpt_dir: str,
+                        policy: QuantPolicy, *, mesh=None,
+                        step: Optional[int] = None,
+                        backend: Optional[str] = None, **engine_kw):
+        """Build a serving engine straight from a packed checkpoint.
+
+        The restore target comes from ``models/model.packed_model_specs``
+        (an eval_shape of init+pack: full-precision weights are never
+        materialized, host or device) and, under a mesh, every leaf is
+        restored per-shard onto its serving sharding from
+        ``MeshRules.param_sharding_tree`` — each device receives only its
+        own slice of the uint8 codes/scales.
+        """
+        from ..ckpt import ckpt as ckpt_lib
+        pol = policy if backend is None else policy.replace(backend=backend)
+        specs = M.packed_model_specs(cfg, pol)
+        shardings = None
+        if mesh is not None:
+            shardings = mesh_lib.MeshRules(mesh).param_sharding_tree(specs)
+        params, _ = ckpt_lib.restore(ckpt_dir, specs, step=step,
+                                     shardings=shardings)
+        return cls(cfg, params, policy, mesh=mesh, backend=backend,
+                   **engine_kw)
+
+    def stats(self) -> dict:
+        """Engine observability: cumulative counters plus live memory
+        placement — the dict deployments eyeball to compare sharded vs
+        single-device runs (tests assert the accounting).
+
+        * ``tokens_generated`` — tokens emitted into ``Request.out``.
+        * ``prefill_dispatches`` / ``decode_dispatches`` / ``ticks`` — the
+          dispatch accounting the chunked-prefill tests pin.
+        * ``occupancy`` — mean fraction of slots holding a live request
+          over all ticks so far (1.0 = the pool never idled).
+        * ``store_nbytes`` / ``*_nbytes_per_device`` — pack-once store
+          footprint and the per-device split of store and KV cache
+          (replicated leaves count full-size on every device).
+        * ``attn_backend`` / ``shard_fallback`` / ``mesh`` — which
+          datapath engaged and why a kernel gate may have disengaged.
+        """
+        denom = self.ticks * self.slots
+        return {
+            "tokens_generated": self.tokens_generated,
+            "prefill_dispatches": self.prefill_dispatches,
+            "decode_dispatches": self.decode_dispatches,
+            "ticks": self.ticks,
+            "occupancy": (self._live_slot_ticks / denom) if denom else 0.0,
+            "live": sum(1 for r in self.live if r is not None),
+            "queued": len(self.queue),
+            "prefill_chunk": self.prefill_chunk,
+            "attn_backend": self.attn_backend,
+            "shard_fallback": self.shard_fallback,
+            "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
+            "store_nbytes": dict(self.store_nbytes),
+            "store_nbytes_per_device": shd.per_device_nbytes(self.params),
+            "cache_nbytes_per_device": shd.per_device_nbytes(self.cache),
+        }
 
     def submit(self, prompt: List[int], max_new: int,
                truncate: bool = False,
@@ -200,6 +420,7 @@ class ServeEngine:
         when it hits max_new, a full cache, or its EOS."""
         req = self.live[s]
         req.out.append(tok)
+        self.tokens_generated += 1
         self.last_tok[s] = tok
         if (len(req.out) >= req.max_new
                 or self.pos[s] >= self.max_len
@@ -209,6 +430,8 @@ class ServeEngine:
             self.live[s] = None
 
     def _tick(self) -> List[Request]:
+        self._live_slot_ticks += sum(
+            1 for r in self.live if r is not None)
         if self.prefill_chunk == 1:
             return self._tick_merged()
         done: List[Request] = []
@@ -224,10 +447,11 @@ class ServeEngine:
         # its position — which the prefill dispatch below then overwrites
         # with the chunk's first real token before anything attends to it.
         if decode_slots:
-            logits, self.cache = self._decode(
-                self.params,
-                jnp.asarray(self.last_tok)[:, None].astype(jnp.int32),
-                self.cache, jnp.asarray(self.pos))
+            with self._hints():
+                logits, self.cache = self._decode(
+                    self.params,
+                    jnp.asarray(self.last_tok)[:, None].astype(jnp.int32),
+                    self.cache, jnp.asarray(self.pos))
             self.decode_dispatches += 1
             nxt = np.asarray(self.sampler(logits))
             for s in decode_slots:
@@ -248,9 +472,10 @@ class ServeEngine:
                 for j in range(n):
                     toks[s, j] = q.popleft()
                 nv[s] = n
-            logits, self.cache = self._prefill(
-                self.params, jnp.asarray(toks), self.cache,
-                jnp.asarray(self.pos), jnp.asarray(nv))
+            with self._hints():
+                logits, self.cache = self._prefill(
+                    self.params, jnp.asarray(toks), self.cache,
+                    jnp.asarray(self.pos), jnp.asarray(nv))
             self.prefill_dispatches += 1
             nxt = np.asarray(self.sampler(logits))
             for s in prefill_slots:
@@ -271,9 +496,10 @@ class ServeEngine:
             if self.live[s] is not None and self.pending_prompt[s]:
                 toks[s] = self.pending_prompt[s].popleft()
                 prefilling[s] = True
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(toks)[:, None].astype(jnp.int32),
-            self.cache, jnp.asarray(self.pos))
+        with self._hints():
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(toks)[:, None].astype(jnp.int32),
+                self.cache, jnp.asarray(self.pos))
         # a tick that consumed any prompt token is a prefill dispatch (the
         # token-by-token path merges both phases into one dispatch)
         if prefilling.any():
